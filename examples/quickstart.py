@@ -1,0 +1,19 @@
+"""Quickstart: train a small LM with AutoAnalyzer watching every step.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 20] [--d-model 256]
+
+Scales to ~100M params with ``--d-model 768 --layers 12`` (slower on CPU);
+the default is container-sized.  Shows: config -> sharded train step ->
+instrumented loop -> checkpoint -> analyzer verdicts.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "yi-34b", "--steps", "20",
+                            "--batch", "4", "--seq", "128",
+                            "--d-model", "256",
+                            "--ckpt-dir", "/tmp/repro_quickstart",
+                            "--analyze-every", "10"]
+    sys.exit(main(argv))

@@ -1,0 +1,4 @@
+"""AutoAnalyzer-JAX: production-grade reproduction of 'Automatic Performance
+Debugging of SPMD Parallel Programs' (Liu et al., 2010) as a multi-pod JAX
+training/serving framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,38 @@
+"""repro.core — the paper's contribution: AutoAnalyzer algorithms.
+
+Liu, Yuan, Zhan, Tu, Meng, "Automatic Performance Debugging of SPMD Parallel
+Programs" (2010).  Pure, deterministic numpy implementations of:
+
+- code-region trees (paper §2)
+- performance vectors + severity metric S (§3.2.1)
+- OPTICS-style density clustering (Fig. 2)
+- external-bottleneck top-down CCR/CCCR search (§3.2.2 Steps 1-5)
+- CRNM + k-means severity classes + internal CCCR search (§3.3)
+- rough-set decision tables / discernibility matrices / core extraction (§3.4)
+- the end-to-end AutoAnalyzer driver (§4)
+"""
+from .analyzer import (AnalysisReport, AutoAnalyzer, Measurements,
+                       PAPER_ATTRIBUTES, RootCauseReport, analyze)
+from .external import CCRNode, ExternalReport, analyze_external
+from .internal import InternalReport, analyze_internal, attribute_flags, crnm
+from .kmeans import KMeansResult, SEVERITY_NAMES, kmeans_1d, severity_classes
+from .optics import ClusterResult, cluster, reachability_order
+from .regions import ROOT_ID, Region, RegionTree
+from .roughset import (CoreResult, DecisionTable, discernibility_matrix,
+                       extract_core, external_decision_table,
+                       internal_decision_table, root_causes)
+from .vectors import (canonical_partition, keep_columns, lengths,
+                      pairwise_distances, severity_S, zero_columns)
+
+__all__ = [
+    "AnalysisReport", "AutoAnalyzer", "Measurements", "PAPER_ATTRIBUTES",
+    "RootCauseReport", "analyze", "CCRNode", "ExternalReport",
+    "analyze_external", "InternalReport", "analyze_internal",
+    "attribute_flags", "crnm", "KMeansResult", "SEVERITY_NAMES", "kmeans_1d",
+    "severity_classes", "ClusterResult", "cluster", "reachability_order",
+    "ROOT_ID", "Region", "RegionTree", "CoreResult", "DecisionTable",
+    "discernibility_matrix", "extract_core", "external_decision_table",
+    "internal_decision_table", "root_causes", "canonical_partition",
+    "keep_columns", "lengths", "pairwise_distances", "severity_S",
+    "zero_columns",
+]

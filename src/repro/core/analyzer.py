@@ -1,0 +1,167 @@
+"""AutoAnalyzer driver (paper §3 end-to-end, §4 'data analysis').
+
+Answers the paper's three questions fully automatically:
+  1. Are there any bottlenecks?            (clustering / severity classes)
+  2. Where are they?                       (CCCR search, external + internal)
+  3. What are their root causes?           (rough-set core extraction)
+
+Inputs are plain numpy matrices collected by ``repro.perfdbg`` (or synthetic
+harnesses in tests/benchmarks):
+
+  measurements                                  shape
+  ------------------------------------------    --------
+  cpu_time   (inclusive, per region/process)    (m, n)
+  wall_time  (inclusive)                        (m, n)
+  program_wall                                  (m,)
+  cycles, instructions                          (m, n)
+
+  attributes: {name: (m, n) matrix} used for root-cause tables.  The paper's
+  canonical five are l1_miss_rate, l2_miss_rate, disk_io, network_io,
+  instructions; the TPU adaptation feeds bytes/flop ratios, collective bytes,
+  host-I/O bytes and HLO flops instead (see perfdbg.attributes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .external import ExternalReport, analyze_external
+from .internal import InternalReport, analyze_internal, attribute_flags, crnm
+from .optics import cluster
+from .regions import RegionTree
+from .roughset import (CoreResult, DecisionTable, external_decision_table,
+                       extract_core, internal_decision_table)
+from .vectors import as_matrix, keep_columns
+
+PAPER_ATTRIBUTES = ("l1_miss_rate", "l2_miss_rate", "disk_io", "network_io",
+                    "instructions")
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurements:
+    cpu_time: np.ndarray          # (m, n) inclusive CPU/device-busy time
+    wall_time: np.ndarray         # (m, n) inclusive wall time
+    program_wall: np.ndarray      # (m,)
+    cycles: np.ndarray            # (m, n)
+    instructions: np.ndarray      # (m, n)
+
+    def __post_init__(self):
+        m, n = as_matrix(self.cpu_time).shape
+        for name in ("wall_time", "cycles", "instructions"):
+            if as_matrix(getattr(self, name)).shape != (m, n):
+                raise ValueError(f"{name} shape mismatch")
+        if np.asarray(self.program_wall).shape != (m,):
+            raise ValueError("program_wall must be (m,)")
+
+    @property
+    def n_processes(self) -> int:
+        return as_matrix(self.cpu_time).shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class RootCauseReport:
+    table: DecisionTable
+    core: CoreResult
+    # per-bottleneck attribution: region/process -> attributes flagged for it
+    per_entry: Tuple[Tuple[object, Tuple[str, ...]], ...]
+
+    def render(self) -> str:
+        lines = [self.core.render()]
+        for eid, attrs in self.per_entry:
+            if attrs:
+                lines.append(f"  entry {eid}: " + ", ".join(attrs))
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisReport:
+    external: ExternalReport
+    internal: InternalReport
+    external_root_causes: Optional[RootCauseReport]
+    internal_root_causes: Optional[RootCauseReport]
+
+    def render(self, tree: Optional[RegionTree] = None) -> str:
+        parts = ["=== external bottlenecks ===", self.external.render(tree)]
+        if self.external_root_causes:
+            parts += ["external root causes:", self.external_root_causes.render()]
+        parts += ["=== internal bottlenecks ===", self.internal.render(tree)]
+        if self.internal_root_causes:
+            parts += ["internal root causes:", self.internal_root_causes.render()]
+        return "\n".join(parts)
+
+
+class AutoAnalyzer:
+    def __init__(self, tree: RegionTree, measurements: Measurements,
+                 attributes: Mapping[str, np.ndarray]):
+        self.tree = tree
+        self.meas = measurements
+        self.attrs = {k: as_matrix(v) for k, v in attributes.items()}
+        m, n = as_matrix(measurements.cpu_time).shape
+        for k, v in self.attrs.items():
+            if v.shape != (m, n):
+                raise ValueError(f"attribute {k} shape {v.shape} != {(m, n)}")
+
+    # -- external ---------------------------------------------------------
+    def _external_root_causes(self, ext: ExternalReport) -> Optional[RootCauseReport]:
+        if not ext.exists or not ext.cccrs:
+            return None
+        cols = [list(self.tree.ids()).index(r) for r in ext.cccrs]
+        names = tuple(self.attrs)
+        m = self.meas.n_processes
+        ids = np.zeros((m, len(names)), dtype=np.int64)
+        for a, name in enumerate(names):
+            vec = keep_columns(self.attrs[name], cols)
+            ids[:, a] = cluster(vec).labels
+        table = external_decision_table(names, ids, ext.clustering.labels)
+        core = extract_core(table)
+        # attribute each non-majority process to its flagged core attributes
+        per_entry = []
+        for i in range(m):
+            flagged = tuple(n for j, n in enumerate(names)
+                            if n in core.core and ids[i, j] != 0)
+            per_entry.append((i, flagged))
+        return RootCauseReport(table, core, tuple(per_entry))
+
+    # -- internal ---------------------------------------------------------
+    def _internal_root_causes(self, internal: InternalReport) -> Optional[RootCauseReport]:
+        if not internal.cccrs:
+            return None
+        names = tuple(self.attrs)
+        region_ids = self.tree.ids()
+        flags = np.zeros((len(region_ids), len(names)), dtype=np.int64)
+        for a, name in enumerate(names):
+            flags[:, a] = attribute_flags(np.mean(self.attrs[name], axis=0))
+        # decision column: severity-classified bottlenecks (CCRs).  The
+        # paper's own Table 3 marks region 14 (a CCR whose CCCR is its child
+        # 11) with D=1, so the decision is CCR membership; CCCRs are the
+        # *locations* reported to the user.
+        is_b = [rid in internal.ccrs for rid in region_ids]
+        table = internal_decision_table(names, flags, is_b, region_ids)
+        core = extract_core(table)
+        per_entry = []
+        for r, rid in enumerate(region_ids):
+            if rid in internal.cccrs:
+                flagged = tuple(n for j, n in enumerate(names)
+                                if n in core.core and flags[r, j] == 1)
+                per_entry.append((rid, flagged))
+        return RootCauseReport(table, core, tuple(per_entry))
+
+    # -- driver -------------------------------------------------------------
+    def analyze(self) -> AnalysisReport:
+        ext = analyze_external(self.tree, self.meas.cpu_time)
+        cm = crnm(self.meas.wall_time, self.meas.program_wall,
+                  self.meas.cycles, self.meas.instructions)
+        internal = analyze_internal(self.tree, cm)
+        return AnalysisReport(
+            external=ext,
+            internal=internal,
+            external_root_causes=self._external_root_causes(ext),
+            internal_root_causes=self._internal_root_causes(internal),
+        )
+
+
+def analyze(tree: RegionTree, measurements: Measurements,
+            attributes: Mapping[str, np.ndarray]) -> AnalysisReport:
+    return AutoAnalyzer(tree, measurements, attributes).analyze()

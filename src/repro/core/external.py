@@ -1,0 +1,189 @@
+"""External-bottleneck detection and location (paper §3.2).
+
+External bottlenecks live in the *interaction* between processes (load
+imbalance, contention).  Detection: cluster the per-process vectors of
+per-region CPU time; more than one cluster => external bottlenecks exist.
+Location: the paper's top-down zero-out-and-recluster search over the code
+region tree (Steps 1-5), refining Critical Code Regions (CCR) to Cores of
+Critical Code Regions (CCCR).
+
+Convention: ``perf`` is the m x n matrix of *inclusive* CPU time (region time
+includes nested children).  Inclusive times are required for Step 2 to see a
+nested bottleneck through its depth-1 ancestor (the paper's ST case: the
+depth-2 ``region 11`` signal is found via depth-1 ``region 14`` first).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .optics import ClusterResult, cluster
+from .regions import RegionTree
+from .vectors import as_matrix, keep_columns, severity_S
+
+MAX_COMPOSITE_COMBOS = 4096  # safety cap for Step 5 enumeration
+
+
+@dataclasses.dataclass(frozen=True)
+class CCRNode:
+    rid: int
+    depth: int
+    is_cccr: bool
+    via_composite: Optional[Tuple[int, ...]] = None  # Step-5 composite members
+
+
+@dataclasses.dataclass(frozen=True)
+class ExternalReport:
+    exists: bool
+    severity: float                      # paper's S metric
+    clustering: ClusterResult
+    ccrs: Tuple[CCRNode, ...]            # all CCRs found, top-down order
+    cccrs: Tuple[int, ...]               # region ids that are external bottlenecks
+
+    def render(self, tree: Optional[RegionTree] = None) -> str:
+        nm = (lambda r: tree.name(r)) if tree is not None else (lambda r: f"region {r}")
+        lines = ["Performance similarity", self.clustering.render("kind"),
+                 f"dissimilarity severity, S: {self.severity:.6f}"]
+        if not self.exists:
+            lines.append("no external bottleneck")
+            return "\n".join(lines)
+        lines.append("CCCR: " + (", ".join(nm(r) for r in self.cccrs) or "(none)"))
+        chains: List[str] = []
+        for node in self.ccrs:
+            tag = f"{node.depth}-CCR" + (" & CCCR" if node.is_cccr else "")
+            chains.append(f"{nm(node.rid)} ({tag})")
+        if chains:
+            lines.append("CCR tree: " + " ---> ".join(chains))
+        return "\n".join(lines)
+
+
+class ExternalAnalyzer:
+    """Runs the paper's §3.2 algorithm against a RegionTree + perf matrix."""
+
+    def __init__(self, tree: RegionTree, perf_inclusive,
+                 cluster_fn: Callable[[np.ndarray], ClusterResult] = cluster):
+        self.tree = tree
+        self.perf = as_matrix(perf_inclusive)
+        if self.perf.shape[1] != len(tree):
+            raise ValueError(
+                f"perf has {self.perf.shape[1]} columns but tree has {len(tree)} regions")
+        self.cluster_fn = cluster_fn
+        self._col: Dict[int, int] = {rid: c for c, rid in enumerate(tree.ids())}
+
+    # -- column helpers ----------------------------------------------------
+    def _cols(self, rids: Sequence[int]) -> List[int]:
+        return [self._col[r] for r in rids]
+
+    def _vectors(self, live_rids: Sequence[int]) -> np.ndarray:
+        return keep_columns(self.perf, self._cols(live_rids))
+
+    def _active(self, rid: int) -> bool:
+        """Paper Step 2 guard: only regions with some nonzero time count."""
+        return bool(np.any(self.perf[:, self._col[rid]] > 0))
+
+    # -- main entry ---------------------------------------------------------
+    def analyze(self) -> ExternalReport:
+        base = self.cluster_fn(self.perf)
+        S = severity_S(self.perf)
+        if base.n_clusters <= 1:
+            return ExternalReport(False, S, base, (), ())
+
+        ccrs: List[CCRNode] = []
+        cccrs: List[int] = []
+
+        level1 = [r for r in self.tree.at_depth(1) if self._active(r)]
+        ref = self.cluster_fn(self._vectors(level1))
+        one_ccrs = self._find_level1_ccrs(level1, ref)
+
+        if one_ccrs:
+            for rid in one_ccrs:
+                ccrs.append(CCRNode(rid, 1, False))
+                context = [r for r in level1 if r != rid]
+                self._descend(rid, context, ref, ccrs, cccrs)
+        else:
+            # Step 5: composite depth-1 regions
+            self._composite_search(level1, ccrs, cccrs)
+
+        # mark CCCR flags on the CCR list
+        marked = tuple(
+            dataclasses.replace(node, is_cccr=node.rid in cccrs) for node in ccrs)
+        return ExternalReport(True, S, base, marked, tuple(dict.fromkeys(cccrs)))
+
+    # -- Step 2 -------------------------------------------------------------
+    def _find_level1_ccrs(self, level1: Sequence[int],
+                          ref: ClusterResult) -> List[int]:
+        found = []
+        for rid in level1:
+            test = self.cluster_fn(self._vectors([r for r in level1 if r != rid]))
+            if not test.same_output(ref):
+                found.append(rid)
+        return found
+
+    # -- Steps 3-4 ------------------------------------------------------------
+    def _descend(self, p: int, context: Sequence[int], ref: ClusterResult,
+                 ccrs: List[CCRNode], cccrs: List[int],
+                 composite: Optional[Tuple[int, ...]] = None) -> None:
+        """Refine CCR ``p``: test each child in place of p's column; a child
+        that alone reproduces the reference clustering is an L-CCR."""
+        children = [k for k in self.tree.children(p) if self._active(k)]
+        if not children:
+            cccrs.append(p)
+            return
+        child_ccrs = []
+        for k in children:
+            test = self.cluster_fn(self._vectors(list(context) + [k]))
+            if test.same_output(ref):
+                child_ccrs.append(k)
+        if not child_ccrs:
+            cccrs.append(p)
+            return
+        for k in child_ccrs:
+            ccrs.append(CCRNode(k, self.tree.depth(k), False, composite))
+            self._descend(k, context, ref, ccrs, cccrs, composite)
+
+    # -- Step 5 ---------------------------------------------------------------
+    def _composite_search(self, level1: Sequence[int],
+                          ccrs: List[CCRNode], cccrs: List[int]) -> None:
+        r = len(level1)
+        for s in range(2, max(r, 2)):
+            combos = list(itertools.combinations(level1, s))
+            if len(combos) > MAX_COMPOSITE_COMBOS:  # pragma: no cover - safety
+                combos = combos[:MAX_COMPOSITE_COMBOS]
+            # composite vectors: each combo contributes the union of its
+            # member columns; remaining singles stay as-is.
+            for combo in combos:
+                singles = [x for x in level1 if x not in combo]
+                ref = self.cluster_fn(self._vectors(list(level1)))
+                # drop the whole composite: changed output => composite is 1-CCR
+                test = self.cluster_fn(self._vectors(singles))
+                if test.same_output(ref):
+                    continue
+                # composite region found; descend into each member as a child
+                member_ccrs = []
+                for k in combo:
+                    t2 = self.cluster_fn(self._vectors(singles + [k]))
+                    if t2.same_output(ref):
+                        member_ccrs.append(k)
+                if not member_ccrs:
+                    # the combination only acts jointly: every member is a CCCR
+                    for k in combo:
+                        ccrs.append(CCRNode(k, self.tree.depth(k), False, combo))
+                        cccrs.append(k)
+                    return
+                for k in member_ccrs:
+                    ccrs.append(CCRNode(k, self.tree.depth(k), False, combo))
+                    context = singles
+                    self._descend(k, context, ref, ccrs, cccrs, combo)
+                return
+        # nothing found even with composites: report the whole level as CCCRs
+        for k in level1:  # pragma: no cover - pathological
+            cccrs.append(k)
+
+
+def analyze_external(tree: RegionTree, perf_inclusive,
+                     cluster_fn: Callable[[np.ndarray], ClusterResult] = cluster
+                     ) -> ExternalReport:
+    return ExternalAnalyzer(tree, perf_inclusive, cluster_fn).analyze()

@@ -1,0 +1,108 @@
+"""Deterministic k-means for severity classification (paper §3.3.2, Fig. 3).
+
+The paper classifies scalar metrics (average CRNM per region, average
+attribute values for the rough-set tables) into five severity categories:
+
+    very high (4), high (3), medium (2), low (1), very low (0)
+
+k-means "can classify the data into k clusters without the threshold value
+provided by users".  In 1-D the k-means objective has an exact O(n^2 k)
+dynamic-programming minimizer (Ckmeans.1d.dp, Wang & Song 2011); we use it
+instead of Lloyd iterations, which are seed-sensitive and can leave interior
+classes empty on gappy severity data.  Clusters map to severity classes by
+ascending centroid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+N_SEVERITY = 5
+SEVERITY_NAMES = ("very low", "low", "medium", "high", "very high")
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansResult:
+    labels: Tuple[int, ...]      # severity class per item (0..k-1, ascending)
+    centroids: Tuple[float, ...]  # ascending centroid per class
+
+    def members(self, severity: int) -> Tuple[int, ...]:
+        return tuple(i for i, l in enumerate(self.labels) if l == severity)
+
+    def render(self) -> str:
+        lines = []
+        for sev in range(len(SEVERITY_NAMES) - 1, -1, -1):
+            mem = self.members(sev)
+            if mem:
+                lines.append(f"{SEVERITY_NAMES[sev]}: " +
+                             ", ".join(str(i) for i in mem))
+        return "\n".join(lines)
+
+
+def _optimal_1d_partition(sorted_vals: np.ndarray, k: int) -> np.ndarray:
+    """Exact 1-D k-means via DP.  Returns cluster id (0..k-1 ascending) for
+    each element of the *sorted* array."""
+    n = len(sorted_vals)
+    pre = np.concatenate([[0.0], np.cumsum(sorted_vals)])
+    pre2 = np.concatenate([[0.0], np.cumsum(sorted_vals ** 2)])
+
+    INF = float("inf")
+    D = np.full((k + 1, n + 1), INF)
+    D[0, 0] = 0.0
+    arg = np.zeros((k + 1, n + 1), dtype=np.int64)
+    for m in range(1, k + 1):
+        for i in range(m, n + 1):
+            # candidates j in [m-1, i): cluster m covers sorted[j..i-1]
+            j = np.arange(m - 1, i)
+            cnt = i - j
+            s = pre[i] - pre[j]
+            sse = pre2[i] - pre2[j] - s * s / cnt
+            cost = D[m - 1, j] + sse
+            bj = int(np.argmin(cost))
+            D[m, i] = cost[bj]
+            arg[m, i] = j[bj]
+    # backtrack boundaries
+    labels = np.zeros(n, dtype=np.int64)
+    i = n
+    for m in range(k, 0, -1):
+        j = arg[m, i]
+        labels[j:i] = m - 1
+        i = j
+    return labels
+
+
+def kmeans_1d(values: Sequence[float], k: int = N_SEVERITY,
+              max_iter: int = 200) -> KMeansResult:
+    """Exact 1-D k-means.  If there are fewer distinct values than ``k``,
+    each distinct value becomes its own cluster and labels are rescaled onto
+    the k-point severity scale (so the top value is always 'very high')."""
+    vals = np.asarray(values, dtype=np.float64)
+    if vals.ndim != 1:
+        raise ValueError("kmeans_1d expects a 1-D array")
+    n = len(vals)
+    if n == 0:
+        return KMeansResult((), ())
+    distinct = np.unique(vals)
+    k_eff = int(min(k, len(distinct)))
+    if k_eff == 1:
+        return KMeansResult(tuple([0] * n), (float(distinct[0]),))
+
+    order = np.argsort(vals, kind="stable")
+    sorted_vals = vals[order]
+    lab_sorted = _optimal_1d_partition(sorted_vals, k_eff)
+    labels = np.empty(n, dtype=np.int64)
+    labels[order] = lab_sorted
+    centroids = np.asarray([float(np.mean(vals[labels == c]))
+                            for c in range(k_eff)])
+    if k_eff < k:
+        scale = (k - 1) / max(k_eff - 1, 1)
+        labels = np.round(labels * scale).astype(np.int64)
+    return KMeansResult(tuple(int(l) for l in labels),
+                        tuple(float(c) for c in centroids))
+
+
+def severity_classes(values: Sequence[float]) -> KMeansResult:
+    """Paper's 5-class severity classification."""
+    return kmeans_1d(values, k=N_SEVERITY)

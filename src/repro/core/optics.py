@@ -1,0 +1,166 @@
+"""Density clustering of process performance vectors (paper §3.2.1, Fig. 2).
+
+The paper uses an OPTICS-flavoured density clustering whose two parameters are
+fixed by the text:
+
+  * neighbourhood threshold  eps_p = 10% * len(V_p)   (relative to the anchor)
+  * count_threshold          = 2    (a cluster needs > 2 points in reach)
+
+Points not absorbed into any cluster are *isolated points*; each isolated
+point forms its own singleton cluster.  OPTICS is chosen "because it has
+advantage in discovering isolated points".
+
+We implement the paper's greedy procedure with density expansion (the OPTICS/
+DBSCAN reachability closure) and make it fully deterministic: anchors are
+visited in rank order and cluster ids are assigned by smallest member rank.
+
+``reachability_order`` additionally exposes the classic OPTICS ordering +
+reachability distances for diagnostics (not needed by the search algorithms).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .vectors import as_matrix, lengths, pairwise_distances, canonical_partition
+
+EPS_FRACTION = 0.10      # paper: threshold = 10% * len(V_p)
+COUNT_THRESHOLD = 2      # paper: count_threshold = 2
+_ABS_EPS_FLOOR = 1e-12   # all-zero vectors (len 0) still cluster together
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterResult:
+    labels: Tuple[int, ...]             # cluster id per process, dense from 0
+    clusters: Tuple[Tuple[int, ...], ...]  # members per cluster id
+    isolated: Tuple[int, ...]           # ranks that are singleton clusters
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.clusters)
+
+    def partition(self) -> Tuple[Tuple[int, ...], ...]:
+        return canonical_partition(self.labels)
+
+    def same_output(self, other: "ClusterResult") -> bool:
+        """Paper Step 2: 'the number of clusters or members of a cluster
+        changed' == the partition changed."""
+        return self.partition() == other.partition()
+
+    def render(self, kind: str = "kind") -> str:
+        lines = [f"there are {self.n_clusters} kinds of processes"
+                 if self.n_clusters != 1 else "there is 1 kind of processes"]
+        for cid, members in enumerate(self.clusters):
+            lines.append(f"{kind} {cid}: " + " ".join(str(x) for x in members))
+        return "\n".join(lines)
+
+
+def _eps(ln: np.ndarray, i: int) -> float:
+    return max(EPS_FRACTION * float(ln[i]), _ABS_EPS_FLOOR)
+
+
+def cluster(perf, eps_fraction: float = EPS_FRACTION,
+            count_threshold: int = COUNT_THRESHOLD) -> ClusterResult:
+    """Cluster process performance vectors (rows of ``perf``).
+
+    Returns a deterministic :class:`ClusterResult`.  With a single process the
+    result is trivially one cluster.
+    """
+    perf = as_matrix(perf)
+    m = perf.shape[0]
+    if m == 0:
+        return ClusterResult((), (), ())
+    dist = pairwise_distances(perf)
+    ln = lengths(perf)
+
+    labels = np.full(m, -1, dtype=np.int64)
+    next_label = 0
+    for anchor in range(m):
+        if labels[anchor] >= 0:
+            continue
+        eps = max(eps_fraction * float(ln[anchor]), _ABS_EPS_FLOOR)
+        neigh = np.flatnonzero(dist[anchor] < eps)  # includes anchor itself
+        # ">=" (anchor + 1 reachable point forms a cluster): the paper's
+        # pseudo-code says ">" but its own Fig. 9 output contains 2-member
+        # clusters ("kind 1: 1 2"), which is only possible with >=.
+        if len(neigh) >= count_threshold:
+            # Confirm a cluster; expand density-reachable points (OPTICS-style
+            # closure) so cluster membership does not depend on anchor order.
+            labels[anchor] = next_label
+            queue: List[int] = [q for q in neigh if labels[q] < 0]
+            for q in queue:
+                labels[q] = next_label
+            while queue:
+                p = queue.pop()
+                eps_p = max(eps_fraction * float(ln[p]), _ABS_EPS_FLOOR)
+                n_p = np.flatnonzero(dist[p] < eps_p)
+                if len(n_p) >= count_threshold:
+                    for q in n_p:
+                        if labels[q] < 0:
+                            labels[q] = next_label
+                            queue.append(int(q))
+            next_label += 1
+    # isolated points -> singleton clusters
+    isolated = tuple(int(i) for i in np.flatnonzero(labels < 0))
+    for i in isolated:
+        labels[i] = next_label
+        next_label += 1
+    # renumber cluster ids by smallest member rank (deterministic)
+    order: dict = {}
+    for i in range(m):
+        order.setdefault(int(labels[i]), i)
+    remap = {old: new for new, old in
+             enumerate(sorted(order, key=lambda lab: order[lab]))}
+    labels = np.array([remap[int(l)] for l in labels], dtype=np.int64)
+    clusters: List[List[int]] = [[] for _ in range(next_label)]
+    for i, lab in enumerate(labels):
+        clusters[int(lab)].append(i)
+    clusters_t = tuple(tuple(c) for c in clusters if c)
+    return ClusterResult(tuple(int(l) for l in labels), clusters_t, isolated)
+
+
+def reachability_order(perf, eps_fraction: float = EPS_FRACTION,
+                       min_pts: int = COUNT_THRESHOLD + 1
+                       ) -> Tuple[Tuple[int, ...], Tuple[float, ...]]:
+    """Classic OPTICS ordering (Ankerst et al. 1999) for diagnostics.
+
+    Returns (visit order, reachability distance per visited point); the first
+    point of each density valley has reachability ``inf``.
+    """
+    perf = as_matrix(perf)
+    m = perf.shape[0]
+    dist = pairwise_distances(perf)
+    ln = lengths(perf)
+    processed = np.zeros(m, dtype=bool)
+    reach = np.full(m, np.inf)
+    order: List[int] = []
+
+    def core_distance(p: int) -> float:
+        eps = _eps(ln, p)
+        within = np.sort(dist[p][dist[p] < eps])
+        return float(within[min_pts - 1]) if len(within) >= min_pts else np.inf
+
+    for start in range(m):
+        if processed[start]:
+            continue
+        seeds = [(np.inf, start)]
+        while seeds:
+            seeds.sort()
+            r, p = seeds.pop(0)
+            if processed[p]:
+                continue
+            processed[p] = True
+            order.append(p)
+            cd = core_distance(p)
+            if np.isfinite(cd):
+                eps = _eps(ln, p)
+                for q in np.flatnonzero(dist[p] < eps):
+                    if processed[q]:
+                        continue
+                    newr = max(cd, float(dist[p, q]))
+                    if newr < reach[q]:
+                        reach[q] = newr
+                        seeds.append((newr, int(q)))
+    return tuple(order), tuple(float(reach[i]) for i in order)

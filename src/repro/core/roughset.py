@@ -1,0 +1,195 @@
+"""Rough-set root-cause analysis (paper §3.4.1).
+
+Pipeline:  decision table  ->  discernibility matrix (Eq. 5)  ->  core
+attribute extraction (Steps 1-3: singleton cores, CNF of uncovered clauses,
+CNF->DNF with absorption, minimal conjunct selection).
+
+The *core* attribute set is reported as the root cause(s) of the bottlenecks
+described by the table.  Ties (paper's Table 1 example yields {a1,a2} or
+{a1,a3}) are preserved: ``cores`` lists every minimal alternative, and
+``core`` is the union of attributes certain to matter plus the first
+alternative (deterministic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Sentinels matching the paper's Eq. 5
+SAME_DECISION = 0      # decisions equal -> no constraint
+INDISCERNIBLE = -1     # decisions differ but no attribute does (inconsistent)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionTable:
+    """entries x attributes with one decision column.
+
+    ``attrs[i][a]`` is the (discretized) value of attribute ``a`` for entry i;
+    values may be any hashable (ints from clustering, strings, ...).
+    """
+
+    entry_ids: Tuple[object, ...]
+    attr_names: Tuple[str, ...]
+    rows: Tuple[Tuple[object, ...], ...]   # len(entry_ids) x len(attr_names)
+    decisions: Tuple[object, ...]
+
+    def __post_init__(self):
+        if len(self.rows) != len(self.entry_ids) or len(self.decisions) != len(self.entry_ids):
+            raise ValueError("decision table shape mismatch")
+        for r in self.rows:
+            if len(r) != len(self.attr_names):
+                raise ValueError("row width != number of attributes")
+
+    @classmethod
+    def build(cls, attr_names: Sequence[str], rows: Sequence[Sequence[object]],
+              decisions: Sequence[object],
+              entry_ids: Optional[Sequence[object]] = None) -> "DecisionTable":
+        if entry_ids is None:
+            entry_ids = tuple(range(len(rows)))
+        return cls(tuple(entry_ids), tuple(attr_names),
+                   tuple(tuple(r) for r in rows), tuple(decisions))
+
+    def render(self) -> str:  # pragma: no cover - cosmetic
+        head = ["ID"] + list(self.attr_names) + ["D"]
+        lines = ["\t".join(head)]
+        for eid, row, dec in zip(self.entry_ids, self.rows, self.decisions):
+            lines.append("\t".join(str(x) for x in (eid, *row, dec)))
+        return "\n".join(lines)
+
+
+def discernibility_matrix(table: DecisionTable) -> List[List[object]]:
+    """Upper-triangular discernibility matrix per Eq. 5.
+
+    Element c_ij is: SAME_DECISION (0) when decisions agree; a frozenset of
+    differing attribute names when decisions differ; INDISCERNIBLE (-1) when
+    decisions differ but the rows are attribute-identical (inconsistent
+    table).
+    """
+    n = len(table.entry_ids)
+    mat: List[List[object]] = [[SAME_DECISION] * n for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1, n):
+            if table.decisions[i] == table.decisions[j]:
+                continue
+            diff = frozenset(
+                a for a, vi, vj in zip(table.attr_names, table.rows[i], table.rows[j])
+                if vi != vj)
+            mat[i][j] = diff if diff else INDISCERNIBLE
+            mat[j][i] = mat[i][j]
+    return mat
+
+
+def _absorb(clauses: List[FrozenSet[str]]) -> List[FrozenSet[str]]:
+    """CNF absorption: drop any clause that is a superset of another."""
+    out: List[FrozenSet[str]] = []
+    for c in sorted(set(clauses), key=lambda s: (len(s), sorted(s))):
+        if not any(kept <= c for kept in out):
+            out.append(c)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreResult:
+    singletons: Tuple[str, ...]            # attributes certain to be in any core
+    cores: Tuple[Tuple[str, ...], ...]     # minimal alternative cores (sorted)
+    inconsistent_pairs: int                # count of INDISCERNIBLE entries
+
+    @property
+    def core(self) -> Tuple[str, ...]:
+        """Deterministic single answer: first minimal alternative."""
+        return self.cores[0] if self.cores else ()
+
+    def render(self) -> str:  # pragma: no cover - cosmetic
+        alts = " or ".join("{" + ", ".join(c) + "}" for c in self.cores)
+        return f"core set: {alts or '{}'}"
+
+
+def extract_core(table: DecisionTable) -> CoreResult:
+    """Steps 1-3 of paper §3.4.1."""
+    mat = discernibility_matrix(table)
+    n = len(table.entry_ids)
+    clauses: List[FrozenSet[str]] = []
+    inconsistent = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            c = mat[i][j]
+            if c == SAME_DECISION:
+                continue
+            if c == INDISCERNIBLE:
+                inconsistent += 1
+                continue
+            clauses.append(c)  # type: ignore[arg-type]
+    if not clauses:
+        return CoreResult((), ((),) if not inconsistent else (), inconsistent)
+
+    # Step 1: singleton clauses are core attributes.
+    cs = sorted({next(iter(c)) for c in clauses if len(c) == 1})
+    cs_set = set(cs)
+
+    # Step 2: keep only clauses untouched by the singleton core; absorb
+    # supersets (the paper's example folds {a2,a3,a4} into {a2,a3}).
+    remaining = _absorb([c for c in clauses if not (c & cs_set)])
+
+    # Step 3: CNF -> DNF, pick minimal conjuncts by (size, frequency).
+    if not remaining:
+        return CoreResult(tuple(cs), (tuple(cs),), inconsistent)
+
+    counts: Dict[FrozenSet[str], int] = {}
+    for combo in itertools.product(*[sorted(c) for c in remaining]):
+        key = frozenset(combo)
+        counts[key] = counts.get(key, 0) + 1
+    min_size = min(len(k) for k in counts)
+    at_min = {k: v for k, v in counts.items() if len(k) == min_size}
+    max_count = max(at_min.values())
+    winners = sorted((tuple(sorted(cs_set | k)) for k, v in at_min.items()
+                      if v == max_count))
+    return CoreResult(tuple(cs), tuple(winners), inconsistent)
+
+
+def root_causes(table: DecisionTable) -> CoreResult:
+    """Alias with the paper's vocabulary: the core attributes of the decision
+    table are the root causes of the bottlenecks it describes."""
+    return extract_core(table)
+
+
+# ---------------------------------------------------------------------------
+# Decision-table builders (paper §3.4.2 / §3.4.3)
+# ---------------------------------------------------------------------------
+
+def external_decision_table(attr_names: Sequence[str],
+                            attr_cluster_ids: np.ndarray,
+                            decision_cluster_ids: Sequence[int]) -> DecisionTable:
+    """External-bottleneck table (paper §3.4.2, Fig. 5).
+
+    ``attr_cluster_ids[m, a]``: cluster id of process m under attribute a
+    (each attribute's per-region vectors clustered with OPTICS, restricted to
+    the CCCR regions).  Decision: cluster id of process m under CPU time.
+    """
+    ids = np.asarray(attr_cluster_ids)
+    m, na = ids.shape
+    if na != len(attr_names):
+        raise ValueError("attribute count mismatch")
+    rows = [tuple(int(x) for x in ids[i]) for i in range(m)]
+    return DecisionTable.build(attr_names, rows,
+                               [int(d) for d in decision_cluster_ids],
+                               entry_ids=list(range(m)))
+
+
+def internal_decision_table(attr_names: Sequence[str],
+                            attr_flags: np.ndarray,
+                            is_bottleneck: Sequence[bool],
+                            region_ids: Sequence[int]) -> DecisionTable:
+    """Internal-bottleneck table (paper §3.4.3, Fig. 6).
+
+    ``attr_flags[r, a]``: 1 iff region r's average attribute a is classified
+    above 'medium' severity by k-means, else 0.  Decision: region is an
+    internal bottleneck (CCCR) or not.
+    """
+    flags = np.asarray(attr_flags)
+    rows = [tuple(int(x) for x in flags[i]) for i in range(flags.shape[0])]
+    return DecisionTable.build(attr_names, rows,
+                               [int(bool(b)) for b in is_bottleneck],
+                               entry_ids=list(region_ids))

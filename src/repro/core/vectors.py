@@ -1,0 +1,81 @@
+"""Performance vectors and the dissimilarity-severity metric S (paper §3.2.1).
+
+Each process/shard ``i`` is represented by a vector ``V_i = <T_i1 .. T_in>``
+whose t-th component is the CPU (device-busy) time of code region t in that
+process.  The matrix convention throughout ``repro.core`` is
+
+    perf[m, n]  --  m processes (ranks/shards)  x  n regions.
+
+Column order follows ``RegionTree.ids()``.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+def as_matrix(perf) -> np.ndarray:
+    m = np.asarray(perf, dtype=np.float64)
+    if m.ndim != 2:
+        raise ValueError(f"performance data must be 2-D (m procs x n regions), got {m.shape}")
+    return m
+
+
+def pairwise_distances(perf: np.ndarray) -> np.ndarray:
+    """Euclidean distance matrix between process vectors (paper Eq. 1)."""
+    perf = as_matrix(perf)
+    sq = np.sum(perf * perf, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (perf @ perf.T)
+    return np.sqrt(np.maximum(d2, 0.0))
+
+
+def lengths(perf: np.ndarray) -> np.ndarray:
+    """Vector norms len_i (paper Eq. 3)."""
+    return np.sqrt(np.sum(as_matrix(perf) ** 2, axis=1))
+
+
+def severity_S(perf: np.ndarray) -> float:
+    """Dissimilarity severity S = max(Dist_ij) / min(len_i) (paper Eq. 2).
+
+    Larger S == more severe performance dissimilarity across processes.
+    A program whose processes are identical has S == 0.
+    """
+    perf = as_matrix(perf)
+    if perf.shape[0] < 2:
+        return 0.0
+    dist = pairwise_distances(perf)
+    ln = lengths(perf)
+    min_len = float(np.min(ln))
+    if min_len <= 0.0:
+        # Degenerate: some process did no measured work.  Fall back to the
+        # mean norm so S stays finite (the clustering still flags the outlier).
+        min_len = float(np.mean(ln)) or 1.0
+    return float(np.max(dist)) / min_len
+
+
+def zero_columns(perf: np.ndarray, cols: Sequence[int]) -> np.ndarray:
+    out = as_matrix(perf).copy()
+    if len(cols):
+        out[:, list(cols)] = 0.0
+    return out
+
+
+def keep_columns(perf: np.ndarray, cols: Sequence[int]) -> np.ndarray:
+    """Zero every column *except* ``cols`` (preserves vector dimensionality,
+    as the paper's searching algorithm requires)."""
+    perf = as_matrix(perf)
+    out = np.zeros_like(perf)
+    if len(cols):
+        out[:, list(cols)] = perf[:, list(cols)]
+    return out
+
+
+def canonical_partition(labels: Sequence[int]) -> Tuple[Tuple[int, ...], ...]:
+    """Canonical form of a clustering result: clusters as sorted tuples of
+    member indices, ordered by smallest member.  Two clusterings are 'the
+    same output' (paper Step 2/3) iff their canonical partitions match."""
+    groups: dict = {}
+    for idx, lab in enumerate(labels):
+        groups.setdefault(lab, []).append(idx)
+    return tuple(sorted(tuple(sorted(g)) for g in groups.values()))

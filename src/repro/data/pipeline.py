@@ -1,0 +1,99 @@
+"""Deterministic synthetic token pipeline with host-I/O accounting.
+
+Produces next-token-prediction batches from a counter-seeded hash stream, so
+any (step, shard) pair regenerates identical data — which is what makes the
+checkpoint/restart contract exact: the iterator state is just the step
+index.  Host-side byte counts feed perfdbg's ``disk_io`` attribute (the
+paper's operating-system-layer metric).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+    bytes_read: int = 0
+
+
+class SyntheticTokens:
+    """Deterministic LM batches: {"tokens": (B, S) int32, "labels": (B, S)}."""
+
+    def __init__(self, vocab_size: int, batch: int, seq: int, seed: int = 0,
+                 prefetch: int = 2):
+        self.vocab_size = vocab_size
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.state = PipelineState()
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        self._prefetch = prefetch
+
+    # -- deterministic generation -------------------------------------------
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        toks = rng.integers(0, self.vocab_size,
+                            size=(self.batch, self.seq + 1), dtype=np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self.state.step)
+        self.state.step += 1
+        self.state.bytes_read += b["tokens"].nbytes + b["labels"].nbytes
+        return b
+
+    # -- prefetch (overlap host data with device compute) -------------------
+    def start_prefetch(self) -> None:
+        if self._thread is not None:
+            return
+        self._q = queue.Queue(maxsize=self._prefetch)
+        self._stop = threading.Event()
+
+        def worker(start_step: int):
+            s = start_step
+            while not self._stop.is_set():
+                try:
+                    self._q.put(self.batch_at(s), timeout=0.2)
+                    s += 1
+                except queue.Full:
+                    continue
+
+        self._thread = threading.Thread(target=worker,
+                                        args=(self.state.step,), daemon=True)
+        self._thread.start()
+
+    def next_prefetched(self) -> Dict[str, np.ndarray]:
+        if self._q is None:
+            return next(self)
+        b = self._q.get()
+        self.state.step += 1
+        self.state.bytes_read += b["tokens"].nbytes + b["labels"].nbytes
+        return b
+
+    def stop_prefetch(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread = None
+            self._q = None
+
+    # -- checkpointable state ------------------------------------------------
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.state.step, "bytes_read": self.state.bytes_read}
+
+    def load_state_dict(self, d: Dict[str, int]) -> None:
+        was_prefetching = self._thread is not None
+        self.stop_prefetch()
+        self.state = PipelineState(int(d["step"]), int(d.get("bytes_read", 0)))
+        if was_prefetching:
+            self.start_prefetch()

@@ -1,0 +1,77 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On a TPU runtime these lower to Mosaic; on CPU (this container) callers pass
+``interpret=True`` (tests) or use the jnp fallbacks in ``repro.models``.
+The wrappers own layout plumbing: head merging/expansion for GQA, dtype
+promotion, state threading.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .rglru_scan import rglru_scan_kernel
+from .wkv6 import wkv6_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0, softcap: float = 0.0,
+              scale: Optional[float] = None, interpret: bool = False
+              ) -> jax.Array:
+    """GQA flash attention.  q: (B, Sq, H, dh); k, v: (B, Sk, K, dh)."""
+    B, Sq, H, dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    if H != K:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    qm = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, dh)
+    km = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, dh)
+    vm = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, dh)
+    o = flash_attention(qm, km, vm, causal=causal, window=window,
+                        softcap=softcap, scale=scale, interpret=interpret)
+    return o.reshape(B, H, Sq, dh).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None,
+               *, interpret: bool = False) -> jax.Array:
+    """Linear recurrence h_t = a_t h_{t-1} + b_t.  a, b: (B, S, W)."""
+    B, S, W = a.shape
+    # pick block sizes that divide the dims (kernel requirement)
+    def divisor(n, target):
+        d = min(target, n)
+        while n % d:
+            d -= 1
+        return d
+    return rglru_scan_kernel(a, b, h0,
+                             block_b=divisor(B, 8),
+                             block_t=divisor(S, 128),
+                             block_w=divisor(W, 512),
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+         u: jax.Array, s0: Optional[jax.Array] = None, *,
+         interpret: bool = False):
+    """RWKV6 recurrence.  r/k/v/logw: (B, T, H, dh); u: (H, dh).
+    Returns (y: (B, T, H, dh), s_final: (B, H, dh, dh))."""
+    B, T, H, dh = r.shape
+    def merge(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+    u_m = jnp.broadcast_to(u[None], (B, H, dh)).reshape(B * H, dh)
+    s0_m = None if s0 is None else s0.reshape(B * H, dh, dh)
+    def divisor(n, target):
+        d = min(target, n)
+        while n % d:
+            d -= 1
+        return d
+    y = wkv6_kernel(merge(r), merge(k), merge(v), merge(logw), u_m, s0_m,
+                    block_t=divisor(T, 64), interpret=interpret)
+    return y.reshape(B, H, T, dh).transpose(0, 2, 1, 3)

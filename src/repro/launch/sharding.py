@@ -1,0 +1,138 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter/input/cache dimension carries a *logical* axis name; rules
+map each name to an ordered list of mesh-axis candidates.  Resolution is
+greedy per tensor: the first candidate whose mesh size divides the dimension
+and whose mesh axes are still unused by this tensor wins; otherwise the
+dimension is replicated.  This one mechanism yields FSDP (embed->data),
+TP (mlp/heads/vocab->model), pod-level DP (batch->(pod,data)) and the
+long-context fallback (cache_seq->data exactly when batch=1 cannot use it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Candidate = Union[str, Tuple[str, ...]]
+
+# rules: logical axis -> ordered candidates (each a mesh axis or axis tuple)
+DEFAULT_RULES: Dict[str, Tuple[Candidate, ...]] = {
+    # inputs / activations
+    "batch": (("pod", "data"), "data"),
+    "seq": (),
+    "cache_seq": ("data",),            # wins only when batch can't shard
+    # params
+    "embed": ("data",),                # FSDP
+    "embed2": (),
+    "mlp": ("model",),                 # TP
+    "q_proj": ("model",),
+    "kv_proj": ("model",),
+    "vocab": ("model",),
+    "experts": (),                     # TP inside experts via mlp axis
+    "experts_ep": ("data",),           # EP: experts sharded over data
+    "rnn": ("model",),
+    "layers": (),
+    # caches
+    "kv_heads": ("model",),
+    "head_dim": ("model",),            # fallback when kv_heads indivisible
+    "heads": ("model",),
+    "q_grp": ("model",),               # grouped-query dim of attention scores
+}
+
+
+def _axis_size(mesh: Mesh, cand: Candidate) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(cand, str):
+        return sizes.get(cand, 0)
+    return int(np.prod([sizes.get(a, 0) for a in cand]))
+
+
+def _mesh_axes(cand: Candidate) -> Tuple[str, ...]:
+    return (cand,) if isinstance(cand, str) else tuple(cand)
+
+
+def resolve_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 mesh: Mesh, rules: Optional[Dict] = None) -> P:
+    """PartitionSpec for one tensor."""
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    parts = []
+    mesh_names = set(mesh.axis_names)
+    for dim, logical in zip(shape, axes):
+        chosen = None
+        if logical is not None:
+            for cand in rules.get(logical, ()):
+                names = _mesh_axes(cand)
+                if not set(names) <= mesh_names:
+                    # e.g. 'pod' absent in a single-pod mesh: try its suffix
+                    names = tuple(n for n in names if n in mesh_names)
+                    if not names:
+                        continue
+                    cand = names if len(names) > 1 else names[0]
+                size = _axis_size(mesh, cand)
+                if size and dim % size == 0 and not (set(_mesh_axes(cand)) & used):
+                    chosen = cand
+                    used.update(_mesh_axes(cand))
+                    break
+        parts.append(chosen)
+    # trim trailing None for tidier specs
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(shape_tree, axes_tree, mesh: Mesh,
+                   rules: Optional[Dict] = None):
+    """NamedSharding tree for (shapes, logical axes) trees."""
+    def one(sd, ax):
+        return NamedSharding(mesh, resolve_spec(sd.shape, ax, mesh, rules))
+    # tree_map flattens shape_tree (leaves: ShapeDtypeStruct/arrays) and uses
+    # flatten_up_to for axes_tree, so the logical-axis tuples stay intact.
+    return jax.tree_util.tree_map(one, shape_tree, axes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for non-param trees
+# ---------------------------------------------------------------------------
+
+def batch_axes(batch_tree) -> Any:
+    """Input batches: first dim is 'batch', rest replicated.  Scalars get ()."""
+    def one(x):
+        nd = len(x.shape)
+        if nd == 0:
+            return ()
+        return ("batch",) + (None,) * (nd - 1)
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_axes_for(cfg, cache_tree) -> Any:
+    """Decode-cache logical axes.  Stacked layout (layers, batch, ...):
+    attention kv get ('layers','batch','cache_seq','kv_heads','head_dim');
+    recurrent states shard their width over 'rnn'/'heads'."""
+    def one(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(x.shape)
+        if name in ("k", "v", "cross_k", "cross_v"):
+            return ("layers", "batch", "cache_seq", "kv_heads", "head_dim")[:nd]
+        if name == "wkv":       # (layers, B, H, dh, dh)
+            return ("layers", "batch", "heads", None, None)[:nd]
+        if name in ("h",):      # (layers, B, rw)
+            return ("layers", "batch", "rnn")[:nd]
+        if name == "conv":      # (layers, B, taps-1, rw)
+            return ("layers", "batch", None, "rnn")[:nd]
+        if name.endswith("shift"):
+            return ("layers", "batch", "embed")[:nd]
+        return ("layers", "batch") + (None,) * (nd - 2)
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def opt_state_axes(param_axes, has_master: bool = False) -> Dict[str, Any]:
+    """Adam moments inherit param logical axes (ZeRO-1); step is replicated;
+    the fp32 master copy (mixed precision) mirrors the params."""
+    out = {"m": param_axes, "v": param_axes, "step": ()}
+    if has_master:
+        out["master"] = param_axes
+    return out

@@ -1,0 +1,205 @@
+"""train_step / serve_step builders with explicit in/out shardings.
+
+All steps are plain functions suitable for ``jax.jit(...).lower(...)`` with
+ShapeDtypeStruct inputs (dry-run) or real arrays (training/serving).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import spec_axes, apply_logits
+from repro.models.model import (chunked_loss, decode_step, forward,
+                                input_specs, loss_fn, param_specs, prefill)
+from repro.models.transformer import cache_shapes
+from repro.optim import adamw
+from repro.runtime import sharding_context
+from repro.launch.sharding import (batch_axes, cache_axes_for,
+                                   opt_state_axes, tree_shardings)
+
+
+def _with_ctx(fn, mesh, rules=None):
+    """Wrap a step so its trace runs inside the sharding context (activates
+    the model-internal ``constrain`` calls)."""
+    @functools.wraps(fn)
+    def wrapped(*args):
+        with sharding_context(mesh, rules):
+            return fn(*args)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+def state_specs(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    """(shape tree, logical-axes tree) for the full train state."""
+    pspecs = param_specs(cfg)
+    pshapes = jax.eval_shape(
+        lambda: jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            pspecs, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "init")))
+    paxes = spec_axes(pspecs)
+    oshapes = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), pshapes)
+    state_shapes = {"params": pshapes, "opt": oshapes}
+    state_axes = {"params": paxes,
+                  "opt": opt_state_axes(paxes, has_master="master" in oshapes)}
+    return state_shapes, state_axes
+
+
+def init_state(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, seed: int = 0):
+    from repro.models.model import init_params
+    params = init_params(cfg, seed)
+    return {"params": params, "opt": adamw.init(params, opt_cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1):
+    """(state, batch) -> (state, metrics); microbatched grad accumulation."""
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mbatch = jax.tree_util.tree_map(split, batch)
+
+            def accum(carry, mb):
+                acc_loss, acc_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, cfg, mb)
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_loss + l, acc_g), None
+
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = lax.scan(accum, (jnp.zeros((), jnp.float32),
+                                                zeros_g), mbatch)
+            inv = 1.0 / microbatches
+            loss = loss * inv
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+        new_params, new_opt, metrics = adamw.update(grads, state["opt"],
+                                                    params, opt_cfg)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_buf: Optional[int] = None):
+    def prefill_step(params, batch):
+        toks = batch["tokens"]
+        buf = s_buf or toks.shape[1]
+        logits, cache = prefill(params, cfg, toks, buf,
+                                patches=batch.get("patches"),
+                                frames=batch.get("frames"))
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One-token decode step (the ``decode_*`` / ``long_*`` shapes)."""
+    def serve_step(params, batch):
+        logits, cache = decode_step(params, cfg, batch["tokens"],
+                                    batch["pos"], batch["cache"])
+        return {"logits": logits, "cache": cache}
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded jit wrappers
+# ---------------------------------------------------------------------------
+
+def shardings_for_batch(cfg: ModelConfig, mesh: Mesh, batch_shapes):
+    axes = batch_axes(batch_shapes)
+    if "cache" in batch_shapes:
+        axes["cache"] = cache_axes_for(cfg, batch_shapes["cache"])
+        axes["pos"] = ()
+    return tree_shardings(batch_shapes, axes, mesh)
+
+
+def jit_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, mesh: Mesh,
+                   batch_shapes, microbatches: int = 1):
+    st_shapes, st_axes = state_specs(cfg, opt_cfg)
+    st_sh = tree_shardings(st_shapes, st_axes, mesh)
+    b_sh = shardings_for_batch(cfg, mesh, batch_shapes)
+    metric_sh = {"loss": NamedSharding(mesh, P()),
+                 "grad_norm": NamedSharding(mesh, P()),
+                 "lr": NamedSharding(mesh, P())}
+    step = _with_ctx(make_train_step(cfg, opt_cfg, microbatches), mesh)
+    # donate the train state: outputs alias inputs, halving state HBM
+    return jax.jit(step, in_shardings=(st_sh, b_sh),
+                   out_shardings=(st_sh, metric_sh),
+                   donate_argnums=(0,)), (st_shapes, st_sh, b_sh)
+
+
+SERVE_FSDP_LIMIT = 10 * 2 ** 30   # replicate weights across 'data' if the
+                                  # TP-only shard fits comfortably in HBM
+
+
+def serve_rules(cfg: ModelConfig, mesh: Mesh) -> Optional[dict]:
+    """Serving has no optimizer state, so FSDP sharding of weights only buys
+    HBM at the cost of an all-gather per decoded token.  When the TP-only
+    shard fits (most archs; not qwen-110B fp32), drop the 'embed'->data rule
+    (EXPERIMENTS.md §Perf, decode hillclimb)."""
+    from repro.launch.sharding import DEFAULT_RULES
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    param_bytes = cfg.total_params() * 4 / tp
+    if param_bytes > SERVE_FSDP_LIMIT:
+        return None
+    rules = dict(DEFAULT_RULES)
+    rules["embed"] = ()
+    return rules
+
+
+def jit_serve_step(cfg: ModelConfig, opt_cfg, mesh: Mesh, batch_shapes):
+    pspecs = param_specs(cfg)
+    pshapes = jax.eval_shape(
+        lambda: jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), pspecs,
+            is_leaf=lambda x: hasattr(x, "init")))
+    rules = serve_rules(cfg, mesh)
+    p_sh = tree_shardings(pshapes, spec_axes(pspecs), mesh, rules)
+    b_sh = shardings_for_batch(cfg, mesh, batch_shapes)
+    out_sh = {"logits": NamedSharding(mesh, P(("pod", "data") if "pod" in mesh.axis_names else "data")),
+              "cache": b_sh["cache"]}
+    # batch=1 (long_500k) cannot shard logits over batch
+    if batch_shapes["tokens"].shape[0] % _dp(mesh) != 0:
+        out_sh["logits"] = NamedSharding(mesh, P())
+    step = _with_ctx(make_serve_step(cfg), mesh, rules)
+    # donate the batch (KV cache buffers update in place)
+    return jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=out_sh,
+                   donate_argnums=(1,)), (pshapes, p_sh, b_sh)
+
+
+def jit_prefill_step(cfg: ModelConfig, mesh: Mesh, batch_shapes,
+                     s_buf: Optional[int] = None):
+    pspecs = param_specs(cfg)
+    pshapes = jax.eval_shape(
+        lambda: jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), pspecs,
+            is_leaf=lambda x: hasattr(x, "init")))
+    p_sh = tree_shardings(pshapes, spec_axes(pspecs), mesh)
+    b_sh = shardings_for_batch(cfg, mesh, batch_shapes)
+    step = _with_ctx(make_prefill_step(cfg, s_buf), mesh)
+    return jax.jit(step, in_shardings=(p_sh, b_sh)), (pshapes, p_sh, b_sh)
+
+
+def _dp(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)

@@ -1,0 +1,9 @@
+"""Model zoo substrate: configs, layers, MoE, RG-LRU, RWKV6, stacks, API."""
+from .config import ModelConfig
+from .model import (decode_step, forward, init_params, input_specs, loss_fn,
+                    param_specs, prefill)
+from .transformer import cache_shapes, group_meta, init_cache
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_params",
+           "input_specs", "loss_fn", "param_specs", "prefill",
+           "cache_shapes", "group_meta", "init_cache"]

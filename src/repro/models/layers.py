@@ -1,0 +1,392 @@
+"""Layer primitives for the model zoo (pure JAX, no flax).
+
+Parameters are nested dicts of arrays.  Every parameter is described by a
+``ParamSpec(shape, axes)`` where ``axes`` are *logical* sharding axes
+(resolved to mesh axes by ``repro.launch.sharding``).  ``build_params``
+materializes a spec tree with deterministic init; ``jax.eval_shape`` over it
+gives allocation-free ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.runtime import constrain
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == ndim
+    init: str = "normal"              # normal | zeros | ones
+    scale: float = 0.02
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"spec axes {self.axes} do not match shape {self.shape}")
+
+
+def build_params(spec_tree, key: jax.Array):
+    """Materialize a ParamSpec tree into actual arrays (deterministic)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = jnp.dtype(spec.dtype)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dt))
+        else:
+            out.append((spec.scale * jax.random.normal(k, spec.shape)).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def spec_axes(spec_tree):
+    """Parallel tree of logical-axis tuples (for sharding resolution)."""
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stacked(spec: ParamSpec, n: int) -> ParamSpec:
+    """Prepend a 'layers' axis (for scan-over-layers stacking)."""
+    return dataclasses.replace(spec, shape=(n, *spec.shape),
+                               axes=("layers", *spec.axes))
+
+
+def stack_spec_tree(tree, n: int):
+    return jax.tree_util.tree_map(lambda s: stacked(s, n), tree,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str) -> Dict[str, ParamSpec]:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="zeros")}
+    return {"scale": ParamSpec((d,), ("embed",), init="zeros"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(p, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32)) \
+            + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+def linear_spec(d_in: int, d_out: int, axes=("embed", "mlp"),
+                bias: bool = False, scale: Optional[float] = None) -> Dict[str, ParamSpec]:
+    scale = 1.0 / math.sqrt(d_in) if scale is None else scale
+    out = {"w": ParamSpec((d_in, d_out), axes, scale=scale)}
+    if bias:
+        out["b"] = ParamSpec((d_out,), (axes[1],), init="zeros")
+    return out
+
+
+def apply_linear(p, x: jax.Array) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal(seq: int, d: int, offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.float32)[:, None]
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = pos * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked online-softmax; jnp fallback for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def attention_spec(cfg) -> Dict[str, Any]:
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "wq": linear_spec(d, H * dh, ("embed", "q_proj"), bias=cfg.qkv_bias),
+        "wk": linear_spec(d, K * dh, ("embed", "kv_proj"), bias=cfg.qkv_bias),
+        "wv": linear_spec(d, K * dh, ("embed", "kv_proj"), bias=cfg.qkv_bias),
+        "wo": linear_spec(H * dh, d, ("q_proj", "embed")),
+    }
+
+
+def _softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+        causal: bool = True, window: int = 0, softcap: float = 0.0,
+        q_offset: int = 0, k_len: Optional[jax.Array] = None,
+        scale: Optional[float] = None, q_chunk: int = 512,
+        pad_heads: int = 0) -> jax.Array:
+    """Grouped-query attention with bounded-memory q-chunking.
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, K, dh) with H % K == 0.  KV heads are
+    expanded to H up front (transient, head-sharded) so the score tensors
+    carry a single head dim divisible by the model axis — with split (K, G)
+    dims neither is shardable for e.g. H=64, K=8 on a 16-way axis.
+    ``q_offset``: absolute position of q[0] (decode / chunked prefill).
+    ``k_len``: optional dynamic valid KV length (decode against a cache).
+    ``window`` > 0 restricts attention to the last ``window`` positions.
+    """
+    B, Sq, H, dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = (1.0 / math.sqrt(dh)) if scale is None else scale
+    q = q * scale
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    H_real = H
+    if pad_heads and pad_heads > H:
+        # zero-pad the head dim so it divides the model axis (e.g. yi-34b
+        # 56 -> 64): padded q rows are zero -> their outputs are zero and get
+        # sliced off below; the ~(pad/H) extra flops buy 16-way sharding of
+        # the otherwise fully replicated attention (EXPERIMENTS.md §Perf)
+        pad = ((0, 0), (0, 0), (0, pad_heads - H), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        H = pad_heads
+    q = constrain(q, "batch", None, "heads")
+    k = constrain(k, "batch", None, "heads")
+    v = constrain(v, "batch", None, "heads")
+    def block(qc: jax.Array, q_pos: jax.Array, kc: jax.Array, vc: jax.Array,
+              k_pos: jax.Array) -> jax.Array:
+        s = jnp.einsum("bqhd,bshd->bhqs", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32))
+        s = constrain(s, "batch", "heads")
+        s = _softcap(s, softcap)
+        mask = jnp.ones((qc.shape[1], kc.shape[1]), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        if k_len is not None:
+            mask &= k_pos[None, :] < k_len
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", p.astype(vc.dtype), vc)
+
+    if Sq <= q_chunk:
+        out = block(q, q_offset + jnp.arange(Sq), k, v, jnp.arange(Sk))
+    else:
+        n_chunks = math.ceil(Sq / q_chunk)
+        pad = n_chunks * q_chunk - Sq
+        q_p = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qs = q_p.reshape(B, n_chunks, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+        qs = constrain(qs, None, "batch", None, "heads")
+
+        # checkpoint per q-chunk: the scan's backward otherwise stashes every
+        # chunk's fp32 score/softmax residuals simultaneously (O(Sq*Sk) HBM);
+        # with remat only one chunk's scores are ever live.
+        chunk_fn = jax.checkpoint(block)
+
+        # sliding-window KV slicing: a q-chunk only sees KV in
+        # (q_start - window, q_end); slicing k/v to that band turns the
+        # per-chunk score tensor from O(q_chunk*Sk) into O(q_chunk*(window+
+        # q_chunk)) — for 32k prefill with a 2k window that is ~12x less
+        # HBM traffic (EXPERIMENTS.md §Perf, recurrentgemma hillclimb).
+        slice_len = 0
+        import os as _os
+        if window and causal and k_len is None and not _os.environ.get("REPRO_NO_KV_SLICE"):
+            slice_len = min(window + q_chunk, Sk)
+
+        def body(c, qc):
+            pos = q_offset + c * q_chunk + jnp.arange(q_chunk)
+            if slice_len:
+                start = jnp.clip(q_offset + c * q_chunk + q_chunk - slice_len,
+                                 0, Sk - slice_len)
+                kc = lax.dynamic_slice(k, (0, start, 0, 0),
+                                       (B, slice_len, H, dh))
+                vc = lax.dynamic_slice(v, (0, start, 0, 0),
+                                       (B, slice_len, H, dh))
+                k_pos = start + jnp.arange(slice_len)
+            else:
+                kc, vc, k_pos = k, v, jnp.arange(Sk)
+            return c + 1, chunk_fn(qc, pos, kc, vc, k_pos)
+
+        _, outs = lax.scan(body, 0, qs)
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * q_chunk, H, dh)
+        out = out[:, :Sq]
+    return out[:, :, :H_real]
+
+
+def attention_block(p, x: jax.Array, cfg, *, positions: jax.Array,
+                    window: int = 0, encoder_out: Optional[jax.Array] = None,
+                    causal: bool = True) -> jax.Array:
+    """Projection + (optionally cross-) attention + out-projection."""
+    B, S, _ = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    kv_src = x if encoder_out is None else encoder_out
+    q = apply_linear(p["wq"], x).reshape(B, S, H, dh)
+    k = apply_linear(p["wk"], kv_src).reshape(B, kv_src.shape[1], K, dh)
+    v = apply_linear(p["wv"], kv_src).reshape(B, kv_src.shape[1], K, dh)
+    if cfg.use_rope and encoder_out is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    out = mha(q, k, v, causal=causal and encoder_out is None, window=window,
+              softcap=cfg.attn_softcap, scale=cfg.query_scale,
+              pad_heads=cfg.pad_heads)
+    return apply_linear(p["wo"], out.reshape(B, S, H * dh))
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention against a KV cache
+# ---------------------------------------------------------------------------
+
+def mha_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               k_len: jax.Array, softcap: float = 0.0,
+               scale: Optional[float] = None) -> jax.Array:
+    """Single-token grouped attention WITHOUT expanding KV heads.
+
+    q: (B, 1, H, dh); k, v: (B, S_buf, K, dh).  At Sq == 1 the score tensor
+    (B, K, G, 1, S) is small, so the grouped form avoids the (B, S, H, dh)
+    KV expansion that dominates decode HBM when G > 1 (e.g. yi-34b: 2.9 GiB
+    per layer per k/v at 32k cache)."""
+    B, _, H, dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = (1.0 / math.sqrt(dh)) if scale is None else scale
+    qg = (q * scale).reshape(B, 1, K, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    valid = jnp.arange(Sk)[None, None, None, None, :] < k_len
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def attention_decode(p, x: jax.Array, cache: Dict[str, jax.Array], cfg, *,
+                     pos: jax.Array, window: int = 0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token attention. cache: {"k","v"}: (B, S_buf, K, dh).
+
+    For windowed layers the cache is a ring buffer of size ``window`` and the
+    write index is ``pos % window``; otherwise it is a full-length buffer.
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = apply_linear(p["wq"], x).reshape(B, 1, H, dh)
+    k_new = apply_linear(p["wk"], x).reshape(B, 1, K, dh)
+    v_new = apply_linear(p["wv"], x).reshape(B, 1, K, dh)
+    if cfg.use_rope:
+        q = rope(q, pos[None].astype(jnp.float32) * jnp.ones((B, 1)), cfg.rope_theta)
+        k_new = rope(k_new, pos[None].astype(jnp.float32) * jnp.ones((B, 1)), cfg.rope_theta)
+    S_buf = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % jnp.maximum(S_buf, 1), pos)
+    kc = lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                  (0, slot.astype(jnp.int32), 0, 0))
+    vc = lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                  (0, slot.astype(jnp.int32), 0, 0))
+    k_len = jnp.minimum(pos + 1, S_buf) if window else pos + 1
+    out = mha_decode(q, kc, vc, k_len=k_len, softcap=cfg.attn_softcap,
+                     scale=cfg.query_scale)
+    y = apply_linear(p["wo"], out.reshape(B, 1, H * dh))
+    return y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_act.endswith("_glu"):
+        return {"wi": linear_spec(d, f, ("embed", "mlp")),
+                "wg": linear_spec(d, f, ("embed", "mlp")),
+                "wo": linear_spec(f, d, ("mlp", "embed"))}
+    return {"wi": linear_spec(d, f, ("embed", "mlp")),
+            "wo": linear_spec(f, d, ("mlp", "embed"))}
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind.startswith("silu"):
+        return jax.nn.silu(x)
+    if kind.startswith("gelu"):
+        return jax.nn.gelu(x)
+    if kind == "sq_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind}")
+
+
+def apply_mlp(p, x: jax.Array, cfg) -> jax.Array:
+    h = _act(apply_linear(p["wi"], x), cfg.mlp_act)
+    if cfg.mlp_act.endswith("_glu"):
+        h = h * apply_linear(p["wg"], x)
+    return apply_linear(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed_spec(cfg) -> Dict[str, ParamSpec]:
+    return {"table": ParamSpec((cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), scale=1.0)}
+
+
+def apply_embed(p, tokens: jax.Array, cfg) -> jax.Array:
+    x = jnp.take(p["table"].astype(jnp.dtype(cfg.compute_dtype)), tokens, axis=0)
+    return x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+
+def logits_spec(cfg) -> Dict[str, Any]:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                           scale=1.0 / math.sqrt(cfg.d_model))}
+
+
+def apply_logits(p, embed_p, x: jax.Array, cfg) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = embed_p["table"].astype(x.dtype).T
+    else:
+        w = p["w"].astype(x.dtype)
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return _softcap(logits.astype(jnp.float32), cfg.logit_softcap)

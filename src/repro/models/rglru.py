@@ -1,0 +1,160 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU + temporal conv).
+
+Block (De et al., arXiv:2402.19427):
+    x  -> linear(d -> rw) -> causal conv1d(width w) -> RG-LRU -> * gelu(gate)
+    gate = linear(d -> rw)
+    out  = linear(rw -> d)
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(block_diag(W_a) x_t + b_a)       recurrence gate
+    i_t = sigmoid(block_diag(W_x) x_t + b_x)       input gate
+    a_t = exp(-c * softplus(lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Sequence form uses ``lax.associative_scan`` (log-depth); the decode step is
+the one-step update.  ``repro.kernels.rglru_scan`` is the Pallas TPU version
+of the same scan; this module is the jnp fallback/oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import ParamSpec, linear_spec, apply_linear
+
+RGLRU_C = 8.0
+GATE_BLOCKS = 16  # block-diagonal gate projections (Griffin uses per-head blocks)
+
+
+def rglru_spec(cfg) -> Dict[str, Any]:
+    d, rw = cfg.d_model, cfg.rnn_width or cfg.d_model
+    blk = rw // GATE_BLOCKS
+    return {
+        "wx": linear_spec(d, rw, ("embed", "rnn")),
+        "wgate": linear_spec(d, rw, ("embed", "rnn")),
+        "conv": ParamSpec((cfg.conv_width, rw), (None, "rnn"),
+                          scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": ParamSpec((rw,), ("rnn",), init="zeros"),
+        "gate_a": ParamSpec((GATE_BLOCKS, blk, blk), (None, "rnn", None),
+                            scale=1.0 / math.sqrt(blk)),
+        "gate_a_b": ParamSpec((rw,), ("rnn",), init="zeros"),
+        "gate_x": ParamSpec((GATE_BLOCKS, blk, blk), (None, "rnn", None),
+                            scale=1.0 / math.sqrt(blk)),
+        "gate_x_b": ParamSpec((rw,), ("rnn",), init="zeros"),
+        "lam": ParamSpec((rw,), ("rnn",), init="ones"),  # softplus(lam) > 0
+        "wo": linear_spec(rw, d, ("rnn", "embed")),
+    }
+
+
+def _block_diag(p_w: jax.Array, p_b: jax.Array, x: jax.Array) -> jax.Array:
+    """x: (..., rw) -> block-diagonal linear with GATE_BLOCKS blocks."""
+    nb, blk, _ = p_w.shape
+    xs = x.reshape(*x.shape[:-1], nb, blk)
+    y = jnp.einsum("...nb,nbc->...nc", xs, p_w.astype(x.dtype))
+    return y.reshape(*x.shape) + p_b.astype(x.dtype)
+
+
+def _gates(p, xc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (a_t decay in fp32, gated input in fp32)."""
+    r = jax.nn.sigmoid(_block_diag(p["gate_a"], p["gate_a_b"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(p["gate_x"], p["gate_x_b"], xc).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * xc.astype(jnp.float32)
+    return a, gated
+
+
+def causal_conv1d(p, x: jax.Array) -> jax.Array:
+    """Depthwise causal temporal conv.  x: (B, S, rw)."""
+    w = p["conv"].astype(x.dtype)           # (taps, rw)
+    taps = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (taps - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(taps):                    # taps is tiny (4): unrolled
+        out = out + xp[:, t:t + x.shape[1]] * w[t]
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def rglru_scan(a: jax.Array, gated: jax.Array,
+               h0: jax.Array | None = None, chunk: int = 512) -> jax.Array:
+    """h_t = a_t * h_{t-1} + gated_t over axis 1.
+
+    a, gated: (B, S, rw) fp32.  h0: optional initial state (B, rw).
+
+    Long sequences scan over chunks with an associative scan *inside* each
+    (checkpointed) chunk: the log-depth intermediates of a full-sequence
+    associative scan are O(S*rw) each and dominated the train-step HBM for
+    recurrentgemma (EXPERIMENTS.md §Perf); chunking bounds them to
+    O(chunk*rw) while the carried state is just (B, rw).
+    ``repro.kernels.rglru_scan`` is the single-pass Pallas TPU version.
+    """
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    B, S, rw = a.shape
+    if S <= chunk or S % chunk:
+        _, h = lax.associative_scan(combine, (a, gated), axis=1)
+        return h
+
+    n = S // chunk
+    a_c = jnp.moveaxis(a.reshape(B, n, chunk, rw), 1, 0)
+    g_c = jnp.moveaxis(gated.reshape(B, n, chunk, rw), 1, 0)
+
+    @jax.checkpoint
+    def body(h, inp):
+        ac, gc = inp
+        gc = gc.at[:, 0].add(ac[:, 0] * h)
+        _, hc = lax.associative_scan(combine, (ac, gc), axis=1)
+        return hc[:, -1], hc
+
+    _, hs = lax.scan(body, jnp.zeros((B, rw), a.dtype), (a_c, g_c))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, rw)
+
+
+def apply_rglru(p, x: jax.Array, cfg,
+                state: Dict[str, jax.Array] | None = None,
+                return_state: bool = False):
+    """Full recurrent block.  x: (B, S, d).
+
+    ``state`` (decode/chunked prefill): {"h": (B, rw), "conv": (B, taps-1, rw)}.
+    """
+    B, S, _ = x.shape
+    xb = apply_linear(p["wx"], x)
+    gate = apply_linear(p["wgate"], x)
+    if state is not None:
+        taps = p["conv"].shape[0]
+        xb_ext = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)
+        xc = causal_conv1d(p, xb_ext)[:, taps - 1:]
+        new_conv = xb_ext[:, -(taps - 1):]
+    else:
+        xc = causal_conv1d(p, xb)
+        new_conv = xb[:, -(p["conv"].shape[0] - 1):]
+    a, gated = _gates(p, xc)
+    h0 = state["h"].astype(jnp.float32) if state is not None else None
+    h = rglru_scan(a, gated, h0)
+    y = h.astype(x.dtype) * jax.nn.gelu(gate)
+    out = apply_linear(p["wo"], y)
+    if return_state:
+        return out, {"h": h[:, -1], "conv": new_conv.astype(jnp.float32)}
+    return out
+
+
+def rglru_decode(p, x: jax.Array, cfg, state: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step (S == 1)."""
+    return apply_rglru(p, x, cfg, state=state, return_state=True)
+
+
+def init_rglru_state(cfg, batch: int) -> Dict[str, jax.Array]:
+    rw = cfg.rnn_width or cfg.d_model
+    return {"h": jnp.zeros((batch, rw), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, rw), jnp.float32)}

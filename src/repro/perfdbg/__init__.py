@@ -1,0 +1,7 @@
+"""Instrumentation + collection substrate for AutoAnalyzer (paper §4)."""
+from .attributes import (dominant_term, region_attributes, roofline_terms,
+                         HBM_BW, LINK_BW, PEAK_FLOPS)
+from .instrument import Instrumenter, build_step_tree
+from .recorder import (ATTR_FIELDS, LOCATE_FIELDS, PAPER_BYTES_PER_CELL,
+                       RECORD_DTYPE, RegionRecorder)
+from .straggler import StragglerVerdict, detect, rebalance_weights

@@ -1,0 +1,89 @@
+"""Region instrumentation for step functions (the paper's 'automatic
+instrumentation' layer, adapted: JAX programs are traced Python, so regions
+are declared by the framework rather than injected by a source-to-source
+compiler — granularity presets mirror the paper's instrumentation modes).
+
+Wall time:  perf_counter around the region (includes waits).
+CPU time:   process_time (excludes I/O / sleep — the paper's CPU-clock-time
+            distinction, which is what lets clustering separate compute
+            imbalance from waiting).
+cycles:     CPU time x nominal frequency.
+instructions: supplied by the workload (analytic op counts) — PAPI has no
+            TPU/CPU-portable equivalent here; DESIGN.md §8 records this
+            adaptation.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+from typing import Dict, Iterator, Optional
+
+from repro.core import RegionTree
+from .recorder import RegionRecorder
+
+NOMINAL_HZ = 2.0e9
+
+# granularity presets (paper: outer loop / functions / parallel lib / ...)
+GRANULARITIES = ("step", "layer", "op")
+
+
+class Instrumenter:
+    """Times named regions for one rank and feeds a RegionRecorder."""
+
+    def __init__(self, recorder: RegionRecorder, rank: int):
+        self.recorder = recorder
+        self.rank = rank
+        self._tree = recorder.tree
+        self._names: Dict[str, int] = {
+            self._tree.name(rid): rid for rid in self._tree.ids()}
+
+    def region_id(self, name: str) -> int:
+        return self._names[name]
+
+    @contextlib.contextmanager
+    def region(self, name: str, *, instructions: float = 0.0,
+               l1_miss_rate: Optional[float] = None,
+               l2_miss_rate: Optional[float] = None,
+               disk_io: float = 0.0, network_io: float = 0.0) -> Iterator[None]:
+        rid = self._names[name]
+        w0 = time.perf_counter()
+        c0 = time.process_time()
+        try:
+            yield
+        finally:
+            wall = time.perf_counter() - w0
+            cpu = time.process_time() - c0
+            self.recorder.add(
+                self.rank, rid, cpu_time=cpu, wall_time=wall,
+                cycles=cpu * NOMINAL_HZ, instructions=instructions,
+                l1_miss_rate=l1_miss_rate, l2_miss_rate=l2_miss_rate,
+                disk_io=disk_io, network_io=network_io)
+
+    @contextlib.contextmanager
+    def program(self) -> Iterator[None]:
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.recorder.add_program_wall(self.rank,
+                                           time.perf_counter() - t0)
+
+
+def build_step_tree(layer_names, granularity: str = "layer") -> RegionTree:
+    """Region tree for an instrumented training step:
+    program -> {data, embed, layers{...}, loss, optimizer, checkpoint}."""
+    t = RegionTree("train_step")
+    t.add("data")
+    t.add("embed")
+    layers = t.add("layers")
+    if granularity in ("layer", "op"):
+        for nm in layer_names:
+            lid = t.add(nm, parent=layers)
+            if granularity == "op":
+                t.add(f"{nm}.mix", parent=lid)   # attn / rnn / moe
+                t.add(f"{nm}.ffn", parent=lid)
+    t.add("loss")
+    t.add("optimizer")
+    t.add("checkpoint")
+    return t

@@ -1,0 +1,130 @@
+"""Per-shard, per-region performance records — the paper's lightweight
+data layout.
+
+The paper's headline claim: for n code regions x m processes AutoAnalyzer
+collects and analyzes at most **125*n*m bytes**, of which ~33% (the
+application-layer timing fields) suffice to *locate* bottlenecks and the
+rest is only consulted for root-cause analysis.  We mirror that contract
+with a fixed 96-byte packed record:
+
+    locate fields  (32 B):  cpu_time  wall_time  cycles  instructions
+    attribute fields (40 B): l1_miss_rate l2_miss_rate disk_io net_io instr_attr
+    ids / pad      (24 B):  region_id  rank  flags  pad
+
+32 / 96 = 33% — the same proportion the paper reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import Measurements, RegionTree
+
+PAPER_BYTES_PER_CELL = 125
+
+RECORD_DTYPE = np.dtype([
+    # -- locate fields (33%) --
+    ("cpu_time", "<f8"), ("wall_time", "<f8"),
+    ("cycles", "<f8"), ("instructions", "<f8"),
+    # -- root-cause attributes --
+    ("l1_miss_rate", "<f8"), ("l2_miss_rate", "<f8"),
+    ("disk_io", "<f8"), ("network_io", "<f8"), ("instr_attr", "<f8"),
+    # -- ids --
+    ("region_id", "<u2"), ("rank", "<u4"), ("flags", "<u2"),
+    ("_pad", "<V16"),
+])
+assert RECORD_DTYPE.itemsize == 96
+
+LOCATE_FIELDS = ("cpu_time", "wall_time", "cycles", "instructions")
+ATTR_FIELDS = ("l1_miss_rate", "l2_miss_rate", "disk_io", "network_io",
+               "instr_attr")
+
+
+class RegionRecorder:
+    """Accumulates per-(rank, region) metrics across a run (or a window of
+    training steps) and exports the matrices ``repro.core`` consumes."""
+
+    def __init__(self, tree: RegionTree, n_ranks: int):
+        self.tree = tree
+        self.n_ranks = n_ranks
+        self._cols: Dict[int, int] = {rid: i for i, rid in enumerate(tree.ids())}
+        n = len(tree)
+        self._data = np.zeros((n_ranks, n), dtype=RECORD_DTYPE)
+        for rank in range(n_ranks):
+            for rid, col in self._cols.items():
+                self._data[rank, col]["region_id"] = rid
+                self._data[rank, col]["rank"] = rank
+        self.program_wall = np.zeros(n_ranks)
+
+    # -- recording ---------------------------------------------------------
+    def add(self, rank: int, region: int, *, cpu_time: float = 0.0,
+            wall_time: float = 0.0, cycles: float = 0.0,
+            instructions: float = 0.0, l1_miss_rate: Optional[float] = None,
+            l2_miss_rate: Optional[float] = None, disk_io: float = 0.0,
+            network_io: float = 0.0) -> None:
+        cell = self._data[rank, self._cols[region]]
+        cell["cpu_time"] += cpu_time
+        cell["wall_time"] += wall_time
+        cell["cycles"] += cycles
+        cell["instructions"] += instructions
+        cell["instr_attr"] += instructions
+        if l1_miss_rate is not None:
+            cell["l1_miss_rate"] = l1_miss_rate
+        if l2_miss_rate is not None:
+            cell["l2_miss_rate"] = l2_miss_rate
+        cell["disk_io"] += disk_io
+        cell["network_io"] += network_io
+
+    def add_program_wall(self, rank: int, wall: float) -> None:
+        self.program_wall[rank] += wall
+
+    # -- the 125*n*m contract ------------------------------------------------
+    def packed(self) -> bytes:
+        return self._data.tobytes()
+
+    def packed_size(self) -> int:
+        return self._data.nbytes
+
+    def within_paper_budget(self) -> bool:
+        n, m = len(self.tree), self.n_ranks
+        return self.packed_size() <= PAPER_BYTES_PER_CELL * n * m
+
+    @classmethod
+    def from_packed(cls, tree: RegionTree, n_ranks: int, blob: bytes
+                    ) -> "RegionRecorder":
+        rec = cls(tree, n_ranks)
+        arr = np.frombuffer(blob, dtype=RECORD_DTYPE).reshape(n_ranks, len(tree))
+        rec._data = arr.copy()
+        return rec
+
+    # -- export -------------------------------------------------------------
+    def _field(self, name: str) -> np.ndarray:
+        return self._data[name].astype(np.float64)
+
+    def measurements(self) -> Measurements:
+        pw = self.program_wall.copy()
+        if not pw.any():
+            pw = self._field("wall_time").sum(axis=1)
+        return Measurements(
+            cpu_time=self._field("cpu_time"),
+            wall_time=self._field("wall_time"),
+            program_wall=pw,
+            cycles=self._field("cycles"),
+            instructions=self._field("instructions"),
+        )
+
+    def attributes(self) -> Dict[str, np.ndarray]:
+        return {
+            "l1_miss_rate": self._field("l1_miss_rate"),
+            "l2_miss_rate": self._field("l2_miss_rate"),
+            "disk_io": self._field("disk_io"),
+            "network_io": self._field("network_io"),
+            "instructions": self._field("instr_attr"),
+        }
+
+    def analyze(self):
+        from repro.core import AutoAnalyzer
+        return AutoAnalyzer(self.tree, self.measurements(),
+                            self.attributes()).analyze()

@@ -1,0 +1,71 @@
+"""Straggler detection & mitigation driven by the paper's external-bottleneck
+machinery.
+
+At pod scale, a slow host / thermally-throttled chip / asymmetric data shard
+shows up exactly as the paper's *external bottleneck*: the per-shard region
+vectors fall into >1 OPTICS cluster.  The majority cluster defines 'healthy';
+minority/isolated ranks are stragglers, attributed by the rough-set core of
+their decision table (e.g. core {instructions} => data imbalance — re-shard;
+core {network_io} => link problem — drain and replace the host).
+
+Mitigation mirrors the paper's ST fix (static -> dynamic dispatch by a
+master): ``rebalance_weights`` computes a work-redistribution factor per
+rank from region CPU times.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import AnalysisReport, ExternalReport
+
+SEVERITY_ALERT = 0.15   # S below this: log only (paper: balanced ST ~ 0.033)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerVerdict:
+    stragglers: Tuple[int, ...]          # rank ids outside the majority cluster
+    majority: Tuple[int, ...]
+    severity: float                      # the paper's S metric
+    causes: Dict[int, Tuple[str, ...]]   # rank -> core attributes flagged
+    action: str                          # none | rebalance | alert
+
+    def render(self) -> str:
+        if not self.stragglers:
+            return f"no stragglers (S={self.severity:.4f})"
+        lines = [f"stragglers: {list(self.stragglers)} (S={self.severity:.4f}, "
+                 f"action={self.action})"]
+        for r in self.stragglers:
+            c = ", ".join(self.causes.get(r, ())) or "unattributed"
+            lines.append(f"  rank {r}: {c}")
+        return "\n".join(lines)
+
+
+def detect(report: AnalysisReport) -> StragglerVerdict:
+    ext = report.external
+    if not ext.exists or ext.clustering.n_clusters <= 1:
+        return StragglerVerdict((), tuple(range(len(ext.clustering.labels))),
+                                ext.severity, {}, "none")
+    clusters = ext.clustering.clusters
+    majority = max(clusters, key=len)
+    stragglers = tuple(r for c in clusters if c is not majority for r in c)
+    causes: Dict[int, Tuple[str, ...]] = {}
+    if report.external_root_causes:
+        for rank, attrs in report.external_root_causes.per_entry:
+            if rank in stragglers and attrs:
+                causes[int(rank)] = attrs
+    action = "alert" if ext.severity < SEVERITY_ALERT else "rebalance"
+    return StragglerVerdict(stragglers, tuple(majority), ext.severity,
+                            causes, action)
+
+
+def rebalance_weights(cpu_time_per_rank: np.ndarray) -> np.ndarray:
+    """Work-redistribution weights ~ 1 / observed rate (the paper's dynamic
+    dispatch: slow ranks get proportionally less of the next window's work).
+    Normalized to sum to n_ranks."""
+    t = np.asarray(cpu_time_per_rank, dtype=np.float64)
+    t = np.maximum(t, 1e-9)
+    w = 1.0 / t
+    return w * (len(w) / w.sum())

@@ -1,0 +1,176 @@
+"""Tests for external/internal bottleneck search over region trees."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (RegionTree, analyze_external, analyze_internal, crnm)
+
+
+def make_tree_st_like() -> RegionTree:
+    """A tree shaped like the paper's ST example (Fig. 8, simplified):
+    depth-1 regions 1..5; region 4 contains children 6,7 (region 6 is where
+    the bottleneck hides)."""
+    t = RegionTree()
+    for i in range(1, 6):
+        t.add(f"region {i}", rid=i)
+    t.add("region 6", parent=4, rid=6)
+    t.add("region 7", parent=4, rid=7)
+    return t
+
+
+def perf_with_nested_imbalance(m=8, noise=0.0, seed=0):
+    """Inclusive CPU times: regions 1-3,5 balanced; region 6 (child of 4)
+    imbalanced across processes; region 4 inclusive = 6 + 7."""
+    rng = np.random.default_rng(seed)
+    n = 7
+    perf = np.zeros((m, n))
+    perf[:, 0] = 10.0  # region 1
+    perf[:, 1] = 12.0  # region 2
+    perf[:, 2] = 8.0   # region 3
+    perf[:, 4] = 9.0   # region 5
+    region6 = np.where(np.arange(m) < m // 2, 10.0, 40.0)  # imbalance!
+    region7 = np.full(m, 5.0)
+    perf[:, 5] = region6
+    perf[:, 6] = region7
+    perf[:, 3] = region6 + region7  # region 4 inclusive
+    if noise:
+        perf *= 1.0 + noise * rng.standard_normal(perf.shape)
+    return perf
+
+
+class TestExternalSearch:
+    def test_balanced_program_no_bottleneck(self):
+        t = make_tree_st_like()
+        perf = perf_with_nested_imbalance()
+        perf[:, 5] = 10.0
+        perf[:, 3] = perf[:, 5] + perf[:, 6]
+        rep = analyze_external(t, perf)
+        assert not rep.exists
+        assert rep.severity == pytest.approx(0.0)
+
+    def test_nested_imbalance_found_via_parent(self):
+        t = make_tree_st_like()
+        rep = analyze_external(t, perf_with_nested_imbalance())
+        assert rep.exists
+        # region 4 is the 1-CCR, region 6 the CCCR (paper's 14 -> 11 pattern)
+        ccr_ids = [c.rid for c in rep.ccrs]
+        assert 4 in ccr_ids
+        assert rep.cccrs == (6,)
+
+    def test_depth1_leaf_imbalance_is_its_own_cccr(self):
+        t = make_tree_st_like()
+        perf = perf_with_nested_imbalance()
+        # move the imbalance into leaf region 2 instead
+        perf[:, 5] = 10.0
+        perf[:, 3] = perf[:, 5] + perf[:, 6]
+        perf[:, 1] = np.where(np.arange(8) < 4, 12.0, 48.0)
+        rep = analyze_external(t, perf)
+        assert rep.exists and rep.cccrs == (2,)
+
+    def test_severity_decreases_after_balancing(self):
+        t = make_tree_st_like()
+        before = analyze_external(t, perf_with_nested_imbalance())
+        balanced = perf_with_nested_imbalance()
+        balanced[:, 5] = 25.0  # same total work, evenly dispatched
+        balanced[:, 3] = balanced[:, 5] + balanced[:, 6]
+        after = analyze_external(t, balanced)
+        assert not after.exists
+        assert after.severity < before.severity
+
+    def test_composite_step5(self):
+        """Two depth-1 regions each carry half of an anti-correlated imbalance
+        so that removing either one alone still leaves a changed clustering;
+        only the composite of both explains it."""
+        t = RegionTree()
+        for i in range(1, 4):
+            t.add(f"r{i}", rid=i)
+        m = 8
+        perf = np.zeros((m, 3))
+        perf[:, 2] = 10.0
+        big = np.where(np.arange(m) < m // 2, 5.0, 45.0)
+        perf[:, 0] = big
+        perf[:, 1] = big[::-1] * 1.7
+        rep = analyze_external(t, perf)
+        assert rep.exists
+        assert len(rep.cccrs) >= 1
+
+    def test_report_renders(self):
+        t = make_tree_st_like()
+        rep = analyze_external(t, perf_with_nested_imbalance())
+        out = rep.render(t)
+        assert "kinds of processes" in out and "CCCR" in out
+
+
+class TestInternalSearch:
+    def _metrics(self, hot_region_col, tree, m=8, n=7):
+        wall = np.full((m, n), 5.0)
+        wall[:, hot_region_col] = 60.0
+        program_wall = wall.sum(axis=1) * 1.02
+        instructions = np.full((m, n), 1e9)
+        cycles = instructions * 1.0
+        cycles[:, hot_region_col] = instructions[:, hot_region_col] * 4.0  # bad CPI
+        return crnm(wall, program_wall, cycles, instructions)
+
+    def test_hot_leaf_region_is_cccr(self):
+        t = make_tree_st_like()
+        cm = self._metrics(1, t)  # region 2, leaf at depth 1
+        rep = analyze_internal(t, cm)
+        assert 2 in rep.cccrs
+
+    def test_nested_equal_severity_child_wins(self):
+        """Paper rule: region 11 nested in 14 with equal severity => the child
+        (leaf) is the CCCR, the parent is not."""
+        t = make_tree_st_like()
+        m, n = 8, 7
+        wall = np.full((m, n), 5.0)
+        wall[:, 5] = 60.0          # region 6 (child)
+        wall[:, 3] = 60.0          # region 4 inclusive wall (~all time in child)
+        program_wall = np.full(m, 100.0)
+        instructions = np.full((m, n), 1e9)
+        cycles = instructions.copy()
+        cycles[:, 5] = instructions[:, 5] * 4.0
+        cycles[:, 3] = instructions[:, 3] * 4.0
+        cm = crnm(wall, program_wall, cycles, instructions)
+        rep = analyze_internal(t, cm)
+        assert 6 in rep.cccrs
+        assert 4 not in rep.cccrs
+
+    def test_crnm_zero_off_callpath(self):
+        wall = np.array([[0.0, 10.0]])
+        cm = crnm(wall, np.array([10.0]), np.ones((1, 2)), np.ones((1, 2)))
+        assert cm[0, 0] == 0.0
+
+    def test_severity_report_renders(self):
+        t = make_tree_st_like()
+        rep = analyze_internal(t, self._metrics(1, t))
+        assert "very high" in rep.render(t) or "high" in rep.render(t)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 12), st.integers(0, 99999), st.floats(2.0, 20.0))
+def test_property_injected_imbalance_is_always_detected(m, seed, factor):
+    """Property: a single depth-1 leaf region whose time differs by `factor`x
+    between two halves of the ranks must be reported as the sole CCCR."""
+    rng = np.random.default_rng(seed)
+    t = RegionTree()
+    for i in range(1, 5):
+        t.add(f"r{i}", rid=i)
+    perf = np.tile(rng.uniform(5, 15, size=4), (m, 1))
+    hot = int(rng.integers(0, 4))
+    perf[:, hot] = np.where(np.arange(m) < m // 2, 10.0, 10.0 * factor)
+    rep = analyze_external(t, perf)
+    assert rep.exists
+    assert rep.cccrs == (hot + 1,)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 10), st.integers(0, 99999))
+def test_property_balanced_program_never_flags(m, seed):
+    rng = np.random.default_rng(seed)
+    t = RegionTree()
+    for i in range(1, 6):
+        t.add(f"r{i}", rid=i)
+    row = rng.uniform(5, 50, size=5)
+    perf = np.tile(row, (m, 1)) * (1 + 0.002 * rng.standard_normal((m, 5)))
+    rep = analyze_external(t, perf)
+    assert not rep.exists

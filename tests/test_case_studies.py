@@ -1,0 +1,125 @@
+"""End-to-end validation of the paper's two case studies (§5.1 / §5.2)."""
+import numpy as np
+import pytest
+
+from repro.perfdbg.workloads.npar1way import (NPAR1WAYWorkload,
+                                              npar1way_region_tree,
+                                              run_npar1way)
+from repro.perfdbg.workloads.st import (STWorkload, run_st, st_region_tree)
+
+SCALE = 0.4  # CI-sized; examples/benchmarks run at 1.0
+
+
+@pytest.fixture(scope="module")
+def st_original():
+    out = run_st(STWorkload(scale=SCALE))
+    return (*out, run_st.last_taus)
+
+
+@pytest.fixture(scope="module")
+def npar_original():
+    out = run_npar1way(NPAR1WAYWorkload(scale=SCALE))
+    return (*out, run_npar1way.last_taus)
+
+
+class TestSTExternal:
+    def test_five_kinds_match_fig9(self, st_original):
+        _, report, _, _ = st_original
+        assert report.external.clustering.clusters == \
+            ((0,), (1, 2), (3,), (4, 6), (5, 7))
+
+    def test_ccr_chain_14_to_11(self, st_original):
+        _, report, _, _ = st_original
+        assert report.external.exists
+        ccr_ids = [c.rid for c in report.external.ccrs]
+        assert 14 in ccr_ids and 11 in ccr_ids
+        assert report.external.cccrs == (11,)
+
+    def test_root_cause_is_instruction_imbalance(self, st_original):
+        _, report, _, _ = st_original
+        assert report.external_root_causes.core.cores == (("instructions",),)
+
+    def test_balancing_removes_bottleneck_and_drops_S(self, st_original):
+        _, report, _, _ = st_original
+        _, balanced, _ = run_st(STWorkload(scale=SCALE, balance_region11=True))
+        assert not balanced.external.exists
+        assert balanced.external.severity < 0.15 < report.external.severity
+
+
+class TestSTInternal:
+    def test_cccrs_are_8_and_11(self, st_original):
+        _, report, _, _ = st_original
+        assert set(report.internal.cccrs) == {8, 11}
+
+    def test_region14_is_ccr_but_not_cccr(self, st_original):
+        _, report, _, _ = st_original
+        assert 14 in report.internal.ccrs
+        assert 14 not in report.internal.cccrs
+
+    def test_root_causes_l2_and_disk(self, st_original):
+        _, report, _, _ = st_original
+        assert report.internal_root_causes.core.cores == \
+            (("disk_io", "l2_miss_rate"),)
+
+    def test_fixes_remove_internal_bottlenecks(self):
+        _, rep, _ = run_st(STWorkload(scale=SCALE, optimize_locality=True,
+                                      buffer_io=True))
+        # paper: 'region 8 is not the bottleneck any longer, while region 11
+        # is still the internal bottleneck' (CRNM 0.41 -> 0.26)
+        assert 8 not in rep.internal.cccrs
+        assert 11 in rep.internal.cccrs
+
+    def test_speedups_positive(self, st_original):
+        """Compare the calibrated per-rank cost totals (deterministic); the
+        benchmarks report real wall-clock at scale=1 on a quiet machine."""
+        rec0, _, _, taus = st_original
+
+        def cost(rec):
+            return rec.measurements().wall_time.sum(axis=1).max()
+
+        t_orig = cost(rec0)
+        for kw in (dict(balance_region11=True),
+                   dict(optimize_locality=True, buffer_io=True),
+                   dict(balance_region11=True, optimize_locality=True,
+                        buffer_io=True)):
+            rec, _, _ = run_st(STWorkload(scale=SCALE, taus=taus, **kw))
+            assert cost(rec) < t_orig * 0.95, f"no speedup for {kw}"
+
+
+class TestNPAR1WAY:
+    def test_single_cluster_no_external(self, npar_original):
+        _, report, _, _ = npar_original
+        assert report.external.clustering.n_clusters == 1
+        assert not report.external.exists
+
+    def test_internal_cccrs_3_and_12(self, npar_original):
+        _, report, _, _ = npar_original
+        assert set(report.internal.cccrs) == {3, 12}
+
+    def test_root_causes_instructions_and_network(self, npar_original):
+        _, report, _, _ = npar_original
+        assert report.internal_root_causes.core.cores == \
+            (("instructions", "network_io"),)
+
+    def test_optimization_speedup_and_instr_reduction(self, npar_original):
+        rec, _, _, taus = npar_original
+        rec_o, rep_o, _ = run_npar1way(
+            NPAR1WAYWorkload(scale=SCALE, eliminate_redundancy=True,
+                             taus=taus))
+        cost = lambda r: r.measurements().wall_time.sum(axis=1).max()
+        assert cost(rec_o) < cost(rec) * 0.97  # paper: +20% program speedup
+        ids = list(npar1way_region_tree().ids())
+        i3, i12 = ids.index(3), ids.index(12)
+        instr = rec.measurements().instructions[0]
+        instr_o = rec_o.measurements().instructions[0]
+        assert instr_o[i3] < instr[i3] * 0.75     # paper: -36.32%
+        assert instr_o[i12] < instr[i12] * 0.9    # paper: -16.93%
+        # network I/O unchanged (paper failed to eliminate it; so do we)
+        net = rec.attributes()["network_io"][0, i12]
+        net_o = rec_o.attributes()["network_io"][0, i12]
+        assert net == pytest.approx(net_o)
+
+    def test_region12_network_io_dominates(self, npar_original):
+        rec, _, _, _ = npar_original
+        net = rec.attributes()["network_io"][0]
+        assert net[list(npar1way_region_tree().ids()).index(12)] == net.max()

@@ -1,0 +1,137 @@
+"""Tests for OPTICS-style density clustering and k-means severity classes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmeans import kmeans_1d, severity_classes
+from repro.core.optics import cluster
+from repro.core.vectors import (canonical_partition, pairwise_distances,
+                                severity_S)
+
+
+class TestOptics:
+    def test_identical_processes_one_cluster(self):
+        perf = np.ones((8, 5)) * 3.0
+        res = cluster(perf)
+        assert res.n_clusters == 1
+        assert res.labels == tuple([0] * 8)
+
+    def test_two_distinct_groups(self):
+        a = np.tile([10.0, 10.0, 10.0, 10.0], (4, 1))
+        b = np.tile([30.0, 10.0, 10.0, 10.0], (4, 1))
+        perf = np.vstack([a, b])
+        res = cluster(perf)
+        assert res.n_clusters == 2
+        assert canonical_partition(res.labels) == ((0, 1, 2, 3), (4, 5, 6, 7))
+
+    def test_small_jitter_stays_one_cluster(self):
+        rng = np.random.default_rng(0)
+        base = np.full((8, 6), 100.0)
+        perf = base * (1.0 + 0.005 * rng.standard_normal((8, 6)))
+        assert cluster(perf).n_clusters == 1
+
+    def test_isolated_point_is_singleton(self):
+        perf = np.full((6, 4), 50.0)
+        perf[5] = [500.0, 50.0, 50.0, 50.0]
+        res = cluster(perf)
+        assert 5 in res.isolated
+        assert res.n_clusters == 2
+
+    def test_three_processes_below_count_threshold_are_isolated(self):
+        # count_threshold=2 means a cluster needs >2 reachable points
+        perf = np.array([[1.0, 0.0], [100.0, 0.0]])
+        res = cluster(perf)
+        assert res.n_clusters == 2
+
+    def test_deterministic_label_order(self):
+        perf = np.vstack([np.full((3, 2), 100.0), np.full((4, 2), 10.0)])
+        res = cluster(perf)
+        # cluster 0 must contain rank 0 (smallest member first)
+        assert res.labels[0] == 0
+
+    def test_all_zero_vectors_single_cluster(self):
+        res = cluster(np.zeros((5, 3)))
+        assert res.n_clusters == 1
+
+
+class TestSeverityS:
+    def test_identical_is_zero(self):
+        assert severity_S(np.full((4, 3), 7.0)) == 0.0
+
+    def test_scale_invariance(self):
+        rng = np.random.default_rng(1)
+        perf = rng.uniform(1, 10, size=(6, 4))
+        assert severity_S(perf) == pytest.approx(severity_S(10.0 * perf))
+
+    def test_single_process(self):
+        assert severity_S(np.ones((1, 3))) == 0.0
+
+    def test_more_imbalance_more_severe(self):
+        base = np.full((4, 3), 10.0)
+        mild, bad = base.copy(), base.copy()
+        mild[0, 0] = 12.0
+        bad[0, 0] = 40.0
+        assert severity_S(bad) > severity_S(mild)
+
+
+class TestKMeans:
+    def test_five_classes_ascending(self):
+        vals = [0.0, 0.1, 1.0, 1.1, 5.0, 5.1, 20.0, 20.5, 100.0, 101.0]
+        res = kmeans_1d(vals, k=5)
+        assert len(set(res.labels)) == 5
+        assert list(res.centroids) == sorted(res.centroids)
+        # the largest values get the highest class
+        assert res.labels[-1] == 4 and res.labels[0] == 0
+
+    def test_fewer_distinct_than_k(self):
+        res = kmeans_1d([1.0, 1.0, 9.0, 9.0], k=5)
+        assert res.labels[0] < res.labels[2]
+        assert res.labels[2] == 4  # top value maps to 'very high' on 5-pt scale
+
+    def test_constant_values_single_class(self):
+        res = kmeans_1d([3.0] * 6, k=5)
+        assert set(res.labels) == {0}
+
+    def test_empty(self):
+        assert kmeans_1d([], k=5).labels == ()
+
+    def test_severity_members(self):
+        res = severity_classes([0.0, 0.0, 10.0])
+        assert 2 in res.members(4)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 8), st.integers(0, 99999))
+def test_property_cluster_labels_are_dense_partition(m, n, seed):
+    rng = np.random.default_rng(seed)
+    perf = rng.uniform(0, 100, size=(m, n))
+    res = cluster(perf)
+    assert len(res.labels) == m
+    labs = set(res.labels)
+    assert labs == set(range(len(labs)))  # dense ids
+    assert sum(len(c) for c in res.clusters) == m  # exact partition
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 99999))
+def test_property_kmeans_labels_monotone_in_value(n, seed):
+    """Sorted inputs must receive non-decreasing severity labels."""
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.uniform(0, 50, size=n))
+    labels = kmeans_1d(vals, k=5).labels
+    assert all(labels[i] <= labels[i + 1] for i in range(n - 1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 6), st.integers(0, 99999))
+def test_property_permutation_invariance_of_partition(m, n, seed):
+    """Relabeling processes permutes the partition consistently."""
+    rng = np.random.default_rng(seed)
+    perf = rng.uniform(0, 10, size=(m, n))
+    perm = rng.permutation(m)
+    res_a = cluster(perf)
+    res_b = cluster(perf[perm])
+    inv = np.empty(m, dtype=int)
+    inv[perm] = np.arange(m)
+    remapped = canonical_partition([res_b.labels[int(inv[i])] for i in range(m)])
+    assert remapped == canonical_partition(res_a.labels)

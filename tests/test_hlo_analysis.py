@@ -1,0 +1,88 @@
+"""Validate the trip-aware HLO cost analyzer against known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import Analyzer, analyze, parse_module
+
+
+def test_scan_matmul_trip_aware_flops():
+    """A 10-iteration scan of (M,M)@(M,M): cost must count 10 bodies."""
+    M = 256
+    trips = 10
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=trips)
+        return y
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, M), jnp.float32),
+        jax.ShapeDtypeStruct((M, M), jnp.float32)).compile()
+    stats = analyze(compiled.as_text())
+    expected = 2 * M ** 3 * trips
+    assert stats["flops"] == pytest.approx(expected, rel=0.2), \
+        f"got {stats['flops']:.3e}, want ~{expected:.3e}"
+    # builtin cost_analysis undercounts by ~trips (regression canary: if XLA
+    # ever fixes this, the roofline layer should switch back)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    builtin = float(dict(ca).get("flops", 0.0))
+    assert builtin < expected / 2
+
+
+def test_plain_matmul_flops_and_bytes():
+    M, N, K = 128, 192, 64
+
+    def f(a, b):
+        return a @ b
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
+    stats = analyze(compiled.as_text())
+    assert stats["flops"] == pytest.approx(2 * M * N * K, rel=0.1)
+    io_bytes = 4 * (M * K + K * N + M * N)
+    assert stats["bytes"] == pytest.approx(io_bytes, rel=0.5)
+
+
+def test_parse_module_finds_entry():
+    def f(x):
+        return jnp.sin(x) * 2
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32,), jnp.float32)).compile()
+    hlo = compiled.as_text()
+    comps = parse_module(hlo)
+    assert comps, "no computations parsed"
+    a = Analyzer(hlo)
+    assert a.entry in comps
+
+
+def test_collective_bytes_spmd():
+    """psum over 4 host devices must show up as all-reduce bytes x shape."""
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under dryrun env)")
+
+
+def test_nested_scan_multiplies():
+    M = 64
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, M), jnp.float32),
+        jax.ShapeDtypeStruct((M, M), jnp.float32)).compile()
+    stats = analyze(compiled.as_text())
+    expected = 2 * M ** 3 * 4 * 5
+    assert stats["flops"] == pytest.approx(expected, rel=0.25)

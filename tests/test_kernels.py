@@ -1,0 +1,166 @@
+"""Pallas kernel tests: interpret=True vs the pure-jnp oracles, sweeping
+shapes and dtypes per the deliverable spec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan_kernel
+from repro.kernels.wkv6 import wkv6_kernel
+
+TOL = dict(rtol=2e-2, atol=2e-2)      # bf16 inputs
+TOL32 = dict(rtol=1e-5, atol=1e-5)    # f32 inputs
+
+
+def _qkv(key, bh, sq, sk, dh, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, sq, dh), dtype)
+    k = jax.random.normal(kk, (bh, sk, dh), dtype)
+    v = jax.random.normal(kv, (bh, sk, dh), dtype)
+    return q, k, v
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("sq,sk,dh,blk", [
+        (128, 128, 64, 64), (256, 256, 128, 128), (64, 64, 32, 32),
+    ])
+    def test_causal_shapes_dtypes(self, dtype, sq, sk, dh, blk):
+        q, k, v = _qkv(jax.random.PRNGKey(0), 4, sq, sk, dh, dtype)
+        got = flash_attention(q, k, v, causal=True, block_q=blk, block_k=blk,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        tol = TOL if dtype == jnp.bfloat16 else TOL32
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol)
+
+    def test_non_causal(self):
+        q, k, v = _qkv(jax.random.PRNGKey(1), 2, 128, 128, 64, jnp.float32)
+        got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, **TOL32)
+
+    def test_sliding_window(self):
+        q, k, v = _qkv(jax.random.PRNGKey(2), 2, 256, 256, 64, jnp.float32)
+        got = flash_attention(q, k, v, causal=True, window=64,
+                              block_q=64, block_k=64, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=64)
+        np.testing.assert_allclose(got, want, **TOL32)
+
+    def test_softcap(self):
+        q, k, v = _qkv(jax.random.PRNGKey(3), 2, 128, 128, 64, jnp.float32)
+        got = flash_attention(q, k, v, causal=True, softcap=50.0,
+                              block_q=64, block_k=64, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, softcap=50.0)
+        np.testing.assert_allclose(got, want, **TOL32)
+
+    def test_gqa_expansion_via_ops(self):
+        B, S, H, K, dh = 2, 128, 8, 2, 64
+        key = jax.random.PRNGKey(4)
+        q = jax.random.normal(key, (B, S, H, dh), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(5), (B, S, K, dh), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(6), (B, S, K, dh), jnp.float32)
+        got = ops.attention(q, k, v, causal=True, interpret=True)
+        # oracle: the model's mha fallback
+        from repro.models.layers import mha
+        want = mha(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_blocks_must_divide(self):
+        q, k, v = _qkv(jax.random.PRNGKey(0), 1, 100, 100, 32, jnp.float32)
+        with pytest.raises(ValueError):
+            flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+
+
+class TestRGLRUScan:
+    @pytest.mark.parametrize("dtype", [jnp.float32])
+    @pytest.mark.parametrize("B,S,W,bt", [(2, 64, 128, 16), (4, 128, 64, 64),
+                                          (1, 256, 512, 128)])
+    def test_matches_sequential(self, dtype, B, S, W, bt):
+        key = jax.random.PRNGKey(0)
+        a = jax.random.uniform(key, (B, S, W), dtype, 0.2, 0.99)
+        b = jax.random.normal(jax.random.PRNGKey(1), (B, S, W), dtype)
+        got = rglru_scan_kernel(a, b, block_b=min(B, 2), block_t=bt,
+                                block_w=min(W, 64), interpret=True)
+        want = ref.rglru_scan_ref(a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_initial_state(self):
+        B, S, W = 2, 32, 64
+        a = jnp.full((B, S, W), 0.9)
+        b = jnp.zeros((B, S, W))
+        h0 = jnp.ones((B, W))
+        got = ops.rglru_scan(a, b, h0, interpret=True)
+        want = ref.rglru_scan_ref(a, b, h0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got[:, 0], 0.9 * np.ones((B, W)), rtol=1e-6)
+
+    def test_matches_model_assoc_scan(self):
+        """Kernel vs the model's associative-scan implementation."""
+        from repro.models.rglru import rglru_scan as assoc
+        B, S, W = 2, 64, 32
+        key = jax.random.PRNGKey(7)
+        a = jax.random.uniform(key, (B, S, W), jnp.float32, 0.1, 0.999)
+        b = jax.random.normal(jax.random.PRNGKey(8), (B, S, W), jnp.float32)
+        got = ops.rglru_scan(a, b, interpret=True)
+        want = assoc(a, b)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("B,T,H,dh,bt", [(1, 64, 2, 32, 16),
+                                             (2, 128, 4, 64, 64)])
+    def test_matches_sequential_ref(self, B, T, H, dh, bt):
+        key = jax.random.PRNGKey(0)
+        mk = lambda i: 0.5 * jax.random.normal(jax.random.PRNGKey(i),
+                                               (B, T, H, dh), jnp.float32)
+        r, k, v = mk(1), mk(2), mk(3)
+        logw = -jnp.exp(jnp.clip(mk(4), -3, 0.5))
+        u = 0.3 * jax.random.normal(key, (H, dh), jnp.float32)
+        got = ops.wkv6(r, k, v, logw, u, interpret=True)
+        want, _ = __import__("repro.models.rwkv6", fromlist=["x"]).wkv6_sequential(
+            r, k, v, logw, u)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_matches_chunked_model(self):
+        from repro.models.rwkv6 import wkv6_chunked
+        B, T, H, dh = 1, 96, 2, 32
+        mk = lambda i: 0.5 * jax.random.normal(jax.random.PRNGKey(i),
+                                               (B, T, H, dh), jnp.float32)
+        r, k, v = mk(1), mk(2), mk(3)
+        logw = -jnp.exp(jnp.clip(mk(4), -3, 0.5))
+        u = 0.3 * jax.random.normal(jax.random.PRNGKey(9), (H, dh))
+        got = ops.wkv6(r, k, v, logw, u, interpret=True)
+        want, _ = wkv6_chunked(r, k, v, logw, u, chunk=32)
+        # the chunked model streams r/k/v in bf16 (HBM optimization,
+        # EXPERIMENTS.md §Perf) — tolerance is bf16-level
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_state_threading(self):
+        """Splitting a sequence in two with state carry == one pass."""
+        B, T, H, dh = 1, 64, 1, 32
+        mk = lambda i: 0.4 * jax.random.normal(jax.random.PRNGKey(i),
+                                               (B, T, H, dh), jnp.float32)
+        r, k, v = mk(1), mk(2), mk(3)
+        logw = -jnp.exp(jnp.clip(mk(4), -3, 0.5))
+        u = jnp.zeros((H, dh))
+        full, s_full = ref.wkv6_ref(
+            r.reshape(B * H, T, dh), k.reshape(B * H, T, dh),
+            v.reshape(B * H, T, dh), logw.reshape(B * H, T, dh),
+            jnp.zeros((B * H, dh)))
+        half = T // 2
+        y1, s1 = ref.wkv6_ref(*(x.reshape(B * H, T, dh)[:, :half]
+                                for x in (r, k, v, logw)),
+                              jnp.zeros((B * H, dh)))
+        y2, s2 = ref.wkv6_ref(*(x.reshape(B * H, T, dh)[:, half:]
+                                for x in (r, k, v, logw)),
+                              jnp.zeros((B * H, dh)), s0=s1)
+        np.testing.assert_allclose(np.concatenate([y1, y2], axis=1), full,
+                                   rtol=1e-5, atol=1e-5)

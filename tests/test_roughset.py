@@ -1,0 +1,120 @@
+"""Rough-set tests, including the paper's exact worked examples."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.roughset import (DecisionTable, INDISCERNIBLE, SAME_DECISION,
+                                 discernibility_matrix, extract_core)
+
+
+def paper_table1() -> DecisionTable:
+    """Paper Table 1 (weather example)."""
+    return DecisionTable.build(
+        attr_names=("a1", "a2", "a3", "a4"),
+        rows=[("sunny", "hot", "high", False),
+              ("sunny", "hot", "high", True),
+              ("overcast", "hot", "high", False),
+              ("sunny", "cool", "low", False)],
+        decisions=["N", "N", "P", "P"],
+    )
+
+
+class TestPaperTable1:
+    def test_discernibility_matrix_matches_fig4(self):
+        mat = discernibility_matrix(paper_table1())
+        # Fig 4 upper triangle: (0,2)=a1, (0,3)=a2a3, (1,2)=a1a4, (1,3)=a2a3a4
+        assert mat[0][1] == SAME_DECISION
+        assert mat[0][2] == frozenset({"a1"})
+        assert mat[0][3] == frozenset({"a2", "a3"})
+        assert mat[1][2] == frozenset({"a1", "a4"})
+        assert mat[1][3] == frozenset({"a2", "a3", "a4"})
+        assert mat[2][3] == SAME_DECISION
+
+    def test_core_is_a1a2_or_a1a3(self):
+        res = extract_core(paper_table1())
+        assert res.singletons == ("a1",)
+        assert set(res.cores) == {("a1", "a2"), ("a1", "a3")}
+
+
+class TestPaperTable2:
+    """ST external-bottleneck decision table (paper Table 2) -> core {a5}."""
+
+    def test_core_is_a5(self):
+        rows = [(0, 0, 0, 0, 0), (0, 0, 0, 0, 1), (0, 0, 0, 0, 1),
+                (1, 0, 0, 0, 2), (0, 1, 0, 0, 3), (1, 1, 0, 1, 4),
+                (1, 2, 0, 1, 3), (1, 2, 0, 0, 4)]
+        dec = [0, 1, 1, 2, 3, 4, 3, 4]
+        t = DecisionTable.build(("a1", "a2", "a3", "a4", "a5"), rows, dec)
+        res = extract_core(t)
+        assert res.cores == (("a5",),)
+
+
+class TestPaperTable3:
+    """ST internal-bottleneck decision table (paper Table 3) -> core {a2,a3}."""
+
+    def test_core_is_a2_a3(self):
+        rows = [(0, 0, 0, 0, 0), (1, 0, 0, 0, 0), (0, 0, 0, 0, 0),
+                (0, 0, 0, 0, 0), (1, 1, 0, 0, 1), (1, 0, 0, 0, 1),
+                (0, 0, 0, 0, 0), (0, 0, 1, 0, 1), (1, 0, 0, 0, 0),
+                (1, 0, 0, 0, 0), (1, 1, 0, 0, 1), (0, 0, 0, 0, 0),
+                (0, 0, 0, 0, 0), (1, 1, 0, 0, 1)]
+        dec = [0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 1, 0, 0, 1]
+        t = DecisionTable.build(("a1", "a2", "a3", "a4", "a5"), rows, dec,
+                                entry_ids=list(range(1, 15)))
+        res = extract_core(t)
+        assert res.cores == (("a2", "a3"),)
+
+
+class TestEdgeCases:
+    def test_all_same_decision_no_core(self):
+        t = DecisionTable.build(("a",), [(0,), (1,)], [0, 0])
+        res = extract_core(t)
+        assert res.cores == ((),)
+
+    def test_inconsistent_rows_counted(self):
+        t = DecisionTable.build(("a",), [(0,), (0,)], [0, 1])
+        mat = discernibility_matrix(t)
+        assert mat[0][1] == INDISCERNIBLE
+        res = extract_core(t)
+        assert res.inconsistent_pairs == 1
+
+    def test_single_attribute_core(self):
+        t = DecisionTable.build(("a", "b"), [(0, 7), (1, 7)], [0, 1])
+        assert extract_core(t).cores == (("a",),)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 5), st.integers(0, 10_000))
+def test_property_core_distinguishes_decisions(n_rows, n_attrs, seed):
+    """Property: restricting the table to any extracted core must distinguish
+    every pair of rows with different decisions at least as well as the full
+    attribute set (i.e., rows discernible under all attributes remain
+    discernible under the core)."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 3, size=(n_rows, n_attrs))
+    dec = rng.integers(0, 2, size=n_rows)
+    names = tuple(f"a{i}" for i in range(n_attrs))
+    t = DecisionTable.build(names, [tuple(r) for r in rows], list(dec))
+    res = extract_core(t)
+    for core in res.cores:
+        idx = [names.index(a) for a in core]
+        for i in range(n_rows):
+            for j in range(i + 1, n_rows):
+                if dec[i] != dec[j] and not np.array_equal(rows[i], rows[j]):
+                    # discernible under full attrs => discernible under core
+                    assert not np.array_equal(rows[i][idx], rows[j][idx]), \
+                        f"core {core} fails to distinguish rows {i},{j}"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 10_000))
+def test_property_core_is_minimal_under_singletons(n_rows, n_attrs, seed):
+    """Every reported alternative core has the same (minimal) size."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 2, size=(n_rows, n_attrs))
+    dec = rng.integers(0, 2, size=n_rows)
+    names = tuple(f"a{i}" for i in range(n_attrs))
+    t = DecisionTable.build(names, [tuple(r) for r in rows], list(dec))
+    res = extract_core(t)
+    sizes = {len(c) for c in res.cores}
+    assert len(sizes) <= 1

@@ -1,0 +1,135 @@
+"""Sharding resolver invariants (unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import DEFAULT_RULES, resolve_spec
+
+
+class FakeMesh:
+    """Mesh stand-in with arbitrary axis sizes (no devices needed)."""
+
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD_MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestResolveSpec:
+    def test_fsdp_tp_weight(self):
+        spec = resolve_spec((8192, 49152), ("embed", "mlp"), MESH)
+        assert spec == P("data", "model")
+
+    def test_indivisible_replicates(self):
+        # vocab 51866 is not divisible by 16 -> replicated
+        spec = resolve_spec((51866, 1280), ("vocab", "embed"), MESH)
+        assert spec == P(None, "data")
+
+    def test_batch_uses_pod_and_data(self):
+        spec = resolve_spec((256, 4096), ("batch", None), POD_MESH)
+        assert spec == P(("pod", "data"))
+
+    def test_batch_falls_back_without_pod(self):
+        spec = resolve_spec((256, 4096), ("batch", None), MESH)
+        assert spec == P("data")
+
+    def test_cache_seq_takes_data_when_batch_cannot(self):
+        # long_500k: batch=1 unshardable; sequence gets the data axis
+        spec = resolve_spec((1, 524288, 8, 128),
+                            ("batch", "cache_seq", "kv_heads", "head_dim"),
+                            MESH)
+        # batch=1 unshardable -> sequence parallel over data; kv=8 falls back
+        # to sharding the head_dim over model
+        assert spec == P(None, "data", None, "model")
+
+    def test_kv_head_fallback_to_head_dim(self):
+        # kv=20 not divisible; head_dim 64 takes the model axis
+        spec = resolve_spec((128, 32768, 20, 64),
+                            ("batch", "cache_seq", "kv_heads", "head_dim"),
+                            MESH)
+        assert spec[0] == "data"
+        assert spec[3] == "model" if len(spec) > 3 else True
+
+    def test_no_duplicate_axis_per_tensor(self):
+        spec = resolve_spec((16, 16), ("embed", "embed"), MESH)
+        used = [s for s in spec if s is not None]
+        assert len(used) == len(set(map(str, used)))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.sampled_from(
+    [None, "batch", "embed", "mlp", "vocab", "heads", "kv_heads",
+     "head_dim", "cache_seq", "layers", "rnn", "q_proj"]),
+    min_size=1, max_size=5),
+    st.lists(st.sampled_from([1, 2, 7, 16, 20, 56, 64, 256, 4096]),
+             min_size=1, max_size=5),
+    st.booleans())
+def test_property_resolver_sound(axes, dims, multi_pod):
+    """Every resolved spec: (1) only names mesh axes, (2) never reuses a mesh
+    axis, (3) every sharded dim is divisible by its mesh-axis size."""
+    n = min(len(axes), len(dims))
+    axes, dims = tuple(axes[:n]), tuple(dims[:n])
+    mesh = POD_MESH if multi_pod else MESH
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = resolve_spec(dims, axes, mesh)
+    used = []
+    for dim, part in zip(dims, tuple(spec) + (None,) * (n - len(spec))):
+        if part is None:
+            continue
+        names = (part,) if isinstance(part, str) else tuple(part)
+        total = 1
+        for nm in names:
+            assert nm in sizes, f"unknown mesh axis {nm}"
+            assert nm not in used, f"mesh axis {nm} reused"
+            used.append(nm)
+            total *= sizes[nm]
+        assert dim % total == 0, f"dim {dim} not divisible by {total}"
+
+
+class TestTreeShardings:
+    def test_real_mesh_roundtrip(self):
+        from repro.launch.sharding import tree_shardings
+        mesh = make_host_mesh()
+        shapes = {"w": jax.ShapeDtypeStruct((4, 8), jax.numpy.float32)}
+        axes = {"w": ("embed", "mlp")}
+        sh = tree_shardings(shapes, axes, mesh)
+        assert sh["w"].mesh.shape == mesh.shape
+
+
+class TestRooflineModule:
+    def test_model_flops_modes(self):
+        from repro.launch.roofline import model_flops_global
+        rec = {"active_params": 1_000, "global_batch": 4, "seq_len": 128,
+               "mode": "train"}
+        assert model_flops_global(rec) == 6 * 1000 * 512
+        rec["mode"] = "prefill"
+        assert model_flops_global(rec) == 2 * 1000 * 512
+        rec["mode"] = "decode"
+        assert model_flops_global(rec) == 2 * 1000 * 4
+
+    def test_cell_roofline_terms(self):
+        from repro.launch.roofline import cell_roofline
+        rec = {"ok": True, "arch": "x", "shape": "train_4k", "mesh": "single",
+               "mode": "train", "seq_len": 128, "global_batch": 4,
+               "active_params": 1000, "total_params": 1000,
+               "mesh_shape": [16, 16],
+               "hlo_stats": {"flops": 197e12, "bytes": 819e9,
+                             "total_collective_bytes": 0.0,
+                             "collective_bytes": {}}}
+        row = cell_roofline(rec)
+        assert row["compute_s"] == pytest.approx(1.0)
+        assert row["memory_s"] == pytest.approx(1.0)
+        assert row["dominant"] in ("compute", "memory")
+        assert 0 <= row["roofline_fraction"] <= 1.0
+
+    def test_skipped_cells_pass_through(self):
+        from repro.launch.roofline import cell_roofline
+        assert cell_roofline({"skipped": "reason", "ok": True,
+                              "arch": "x", "shape": "s", "mesh": "m"}) is None
