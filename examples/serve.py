@@ -1,10 +1,13 @@
-"""Batched serving demo: prefill + decode loop with per-phase analysis.
+"""Batched serving demo: prefill + decode rounds with streaming analysis.
 
-    PYTHONPATH=src python examples/serve.py [--arch mixtral-8x7b] [--tokens 16]
+    PYTHONPATH=src python examples/serve.py [--arch mixtral-8x7b] \
+        [--tokens 8] [--rounds 3] [--schema paper|tpu]
 
 Runs a reduced config of the chosen architecture, prefills a batch of
-prompts, decodes N tokens per request, and feeds phase timings through the
-AutoAnalyzer recorder (regions: prefill / decode / detokenize).
+prompts, then decodes ``--tokens`` tokens per request per round.  Each round
+is one collection window: the recorder is frozen and reset, the window is
+fed to an AnalysisSession, and the final report shows the per-window
+timeline (regions: prefill / decode / detokenize).
 """
 import argparse
 import time
@@ -14,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced_config
-from repro.core import RegionTree
+from repro.core import AnalysisSession, RegionTree
 from repro.models import init_params
 from repro.models.model import decode_step, prefill
 from repro.perfdbg import Instrumenter, RegionRecorder
@@ -25,52 +28,77 @@ def main() -> int:
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=8,
+                    help="tokens decoded per request per round")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="decode rounds == analysis windows")
+    ap.add_argument("--schema", default="paper", choices=("paper", "tpu"))
     args = ap.parse_args()
+    if args.rounds < 1 or args.tokens < 1:
+        ap.error("--rounds and --tokens must be >= 1")
 
     cfg = reduced_config(args.arch)
     params = init_params(cfg, 0)
     key = jax.random.PRNGKey(0)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    s_buf = args.prompt_len + args.tokens
+    s_buf = args.prompt_len + args.rounds * args.tokens
 
     tree = RegionTree("serve")
     for nm in ("prefill", "decode", "detokenize"):
         tree.add(nm)
-    rec = RegionRecorder(tree, 1)
+    rec = RegionRecorder(tree, 1, schema=args.schema)
     ins = Instrumenter(rec, 0)
+    session = AnalysisSession(tree)
+    io_kw = "host_io_bytes" if args.schema == "tpu" else "disk_io"
 
     prefill_j = jax.jit(lambda p, t: prefill(p, cfg, t, s_buf))
     decode_j = jax.jit(lambda p, t, pos, c: decode_step(p, cfg, t, pos, c))
 
-    with ins.program():
-        with ins.region("prefill",
-                        instructions=2 * cfg.active_params() * prompts.size):
-            logits, cache = prefill_j(params, prompts)
-            jax.block_until_ready(logits)
-        out_tokens = [jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)]
-        with ins.region("decode", instructions=2 * cfg.active_params()
-                        * args.batch * args.tokens):
-            for i in range(args.tokens):
-                pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-                logits, cache = decode_j(params, out_tokens[-1], pos, cache)
-                out_tokens.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-            jax.block_until_ready(logits)
-        with ins.region("detokenize", instructions=args.batch * args.tokens):
-            seqs = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    out_tokens = []
+    cache = None
+    decode_wall = 0.0
+    for rnd in range(args.rounds):
+        with ins.program():
+            if rnd == 0:
+                with ins.region("prefill", instructions=2 * cfg.active_params()
+                                * prompts.size):
+                    logits, cache = prefill_j(params, prompts)
+                    jax.block_until_ready(logits)
+                out_tokens.append(
+                    jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32))
+            w0 = time.perf_counter()
+            with ins.region("decode", instructions=2 * cfg.active_params()
+                            * args.batch * args.tokens):
+                for i in range(args.tokens):
+                    pos = jnp.asarray(
+                        args.prompt_len + rnd * args.tokens + i, jnp.int32)
+                    logits, cache = decode_j(params, out_tokens[-1], pos, cache)
+                    out_tokens.append(
+                        jnp.argmax(logits, axis=-1).astype(jnp.int32))
+                jax.block_until_ready(logits)
+            decode_wall += time.perf_counter() - w0
+            with ins.region("detokenize", nominal_cpi=1.0,
+                            **{io_kw: 4.0 * args.batch * args.tokens}):
+                # only this round's tokens: each window must measure one
+                # round's work, not everything accumulated since round 0
+                _ = np.concatenate(
+                    [np.asarray(t) for t in out_tokens[-args.tokens:]], axis=1)
+        assert rec.within_paper_budget()
+        entry = session.ingest_recorder(rec, label=f"round {rnd}")
+        cccrs = [tree.name(r) for r in entry.report.internal.cccrs]
+        print(f"[round {rnd}] decoded {args.tokens}/req | "
+              f"internal bottlenecks: {cccrs or ['(none)']}")
 
-    print(f"[serve] {cfg.name} (reduced): batch={args.batch} "
-          f"prompt={args.prompt_len} decoded={args.tokens}")
+    seqs = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"\n[serve] {cfg.name} (reduced, schema={args.schema}): "
+          f"batch={args.batch} prompt={args.prompt_len} "
+          f"decoded={args.rounds * args.tokens}")
     for b in range(min(args.batch, 2)):
         print(f"  request {b}: {seqs[b].tolist()}")
-    report = rec.analyze()
-    print("\nper-phase analysis (internal severity classes):")
-    print(report.internal.render(tree))
-    m = rec.measurements()
-    ids = list(tree.ids())
-    wall = m.wall_time[0]
-    tput = args.batch * args.tokens / max(wall[ids.index(2)], 1e-9)
+    print("\n" + session.report().render(tree))
+    total = args.batch * args.rounds * args.tokens
+    tput = total / max(decode_wall, 1e-9)
     print(f"\ndecode throughput: {tput:.1f} tok/s (CPU, interpret-free jnp path)")
     return 0
 

@@ -12,7 +12,8 @@ Programs" (2010).  Pure, deterministic numpy implementations of:
 - the end-to-end AutoAnalyzer driver (§4)
 """
 from .analyzer import (AnalysisReport, AutoAnalyzer, Measurements,
-                       PAPER_ATTRIBUTES, RootCauseReport, analyze)
+                       PAPER_ATTRIBUTES, RootCauseReport, analyze,
+                       external_root_causes, internal_root_causes)
 from .external import CCRNode, ExternalReport, analyze_external
 from .internal import InternalReport, analyze_internal, attribute_flags, crnm
 from .kmeans import KMeansResult, SEVERITY_NAMES, kmeans_1d, severity_classes
@@ -21,12 +22,16 @@ from .regions import ROOT_ID, Region, RegionTree
 from .roughset import (CoreResult, DecisionTable, discernibility_matrix,
                        extract_core, external_decision_table,
                        internal_decision_table, root_causes)
+from .session import (AnalysisSession, SessionReport, WindowDiff, WindowEntry,
+                      analyze_window, diff_reports)
 from .vectors import (canonical_partition, keep_columns, lengths,
                       pairwise_distances, severity_S, zero_columns)
 
 __all__ = [
-    "AnalysisReport", "AutoAnalyzer", "Measurements", "PAPER_ATTRIBUTES",
-    "RootCauseReport", "analyze", "CCRNode", "ExternalReport",
+    "AnalysisReport", "AnalysisSession", "AutoAnalyzer", "Measurements",
+    "PAPER_ATTRIBUTES", "RootCauseReport", "SessionReport", "WindowDiff",
+    "WindowEntry", "analyze", "analyze_window", "diff_reports",
+    "external_root_causes", "internal_root_causes", "CCRNode", "ExternalReport",
     "analyze_external", "InternalReport", "analyze_internal",
     "attribute_flags", "crnm", "KMeansResult", "SEVERITY_NAMES", "kmeans_1d",
     "severity_classes", "ClusterResult", "cluster", "reachability_order",

@@ -23,12 +23,13 @@ harnesses in tests/benchmarks):
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .external import ExternalReport, analyze_external
-from .internal import InternalReport, analyze_internal, attribute_flags, crnm
+from .external import ExternalReport
+from .internal import InternalReport, attribute_flags
 from .optics import cluster
 from .regions import RegionTree
 from .roughset import (CoreResult, DecisionTable, external_decision_table,
@@ -92,7 +93,69 @@ class AnalysisReport:
         return "\n".join(parts)
 
 
+def external_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
+                         ext: ExternalReport) -> Optional[RootCauseReport]:
+    """Rough-set root causes for external bottlenecks (paper §3.4.2).
+
+    Per-attribute OPTICS clustering is restricted to the CCCR columns; the
+    per-process attribution is computed with vectorized masks so repeated
+    window analysis stays cheap.
+    """
+    if not ext.exists or not ext.cccrs:
+        return None
+    names = tuple(attrs)
+    region_ids = np.asarray(tree.ids())
+    cols = np.flatnonzero(np.isin(region_ids, np.asarray(ext.cccrs)))
+    m = len(ext.clustering.labels)
+    ids = np.zeros((m, len(names)), dtype=np.int64)
+    if names:   # attrs may be empty: locate-only analysis
+        kept = np.stack([keep_columns(as_matrix(attrs[n]), cols)
+                         for n in names])                     # (na, m, n)
+        for a in range(len(names)):   # OPTICS runs per attribute matrix
+            ids[:, a] = cluster(kept[a]).labels
+    table = external_decision_table(names, ids, ext.clustering.labels)
+    core = extract_core(table)
+    # attribute each non-majority process to its flagged core attributes
+    core_mask = np.asarray([n in core.core for n in names], dtype=bool)
+    flagged = (ids != 0) & core_mask[None, :]
+    per_entry = tuple((i, tuple(itertools.compress(names, flagged[i])))
+                      for i in range(m))
+    return RootCauseReport(table, core, per_entry)
+
+
+def internal_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
+                         internal: InternalReport) -> Optional[RootCauseReport]:
+    """Rough-set root causes for internal bottlenecks (paper §3.4.3),
+    vectorized over regions and attributes."""
+    if not internal.cccrs:
+        return None
+    names = tuple(attrs)
+    region_ids = tree.ids()
+    flags = np.zeros((len(region_ids), len(names)), dtype=np.int64)
+    if names:   # attrs may be empty: locate-only analysis
+        means = np.stack([as_matrix(attrs[n]) for n in names]).mean(axis=1)
+        flags = np.stack([attribute_flags(means[a])
+                          for a in range(len(names))], axis=1)  # (n, na)
+    # decision column: severity-classified bottlenecks (CCRs).  The
+    # paper's own Table 3 marks region 14 (a CCR whose CCCR is its child
+    # 11) with D=1, so the decision is CCR membership; CCCRs are the
+    # *locations* reported to the user.
+    is_b = np.isin(np.asarray(region_ids), np.asarray(internal.ccrs))
+    table = internal_decision_table(names, flags, is_b.tolist(), region_ids)
+    core = extract_core(table)
+    core_mask = np.asarray([n in core.core for n in names], dtype=bool)
+    flagged = (flags == 1) & core_mask[None, :]
+    cccr_set = set(internal.cccrs)
+    per_entry = tuple((rid, tuple(itertools.compress(names, flagged[r])))
+                      for r, rid in enumerate(region_ids) if rid in cccr_set)
+    return RootCauseReport(table, core, per_entry)
+
+
 class AutoAnalyzer:
+    """Single-window analyzer.  The driver logic lives in
+    ``core.session.analyze_window``; this class validates inputs and is the
+    convenient object API (``AutoAnalyzer(tree, meas, attrs).analyze()``)."""
+
     def __init__(self, tree: RegionTree, measurements: Measurements,
                  attributes: Mapping[str, np.ndarray]):
         self.tree = tree
@@ -103,65 +166,19 @@ class AutoAnalyzer:
             if v.shape != (m, n):
                 raise ValueError(f"attribute {k} shape {v.shape} != {(m, n)}")
 
-    # -- external ---------------------------------------------------------
     def _external_root_causes(self, ext: ExternalReport) -> Optional[RootCauseReport]:
-        if not ext.exists or not ext.cccrs:
-            return None
-        cols = [list(self.tree.ids()).index(r) for r in ext.cccrs]
-        names = tuple(self.attrs)
-        m = self.meas.n_processes
-        ids = np.zeros((m, len(names)), dtype=np.int64)
-        for a, name in enumerate(names):
-            vec = keep_columns(self.attrs[name], cols)
-            ids[:, a] = cluster(vec).labels
-        table = external_decision_table(names, ids, ext.clustering.labels)
-        core = extract_core(table)
-        # attribute each non-majority process to its flagged core attributes
-        per_entry = []
-        for i in range(m):
-            flagged = tuple(n for j, n in enumerate(names)
-                            if n in core.core and ids[i, j] != 0)
-            per_entry.append((i, flagged))
-        return RootCauseReport(table, core, tuple(per_entry))
+        return external_root_causes(self.tree, self.attrs, ext)
 
-    # -- internal ---------------------------------------------------------
     def _internal_root_causes(self, internal: InternalReport) -> Optional[RootCauseReport]:
-        if not internal.cccrs:
-            return None
-        names = tuple(self.attrs)
-        region_ids = self.tree.ids()
-        flags = np.zeros((len(region_ids), len(names)), dtype=np.int64)
-        for a, name in enumerate(names):
-            flags[:, a] = attribute_flags(np.mean(self.attrs[name], axis=0))
-        # decision column: severity-classified bottlenecks (CCRs).  The
-        # paper's own Table 3 marks region 14 (a CCR whose CCCR is its child
-        # 11) with D=1, so the decision is CCR membership; CCCRs are the
-        # *locations* reported to the user.
-        is_b = [rid in internal.ccrs for rid in region_ids]
-        table = internal_decision_table(names, flags, is_b, region_ids)
-        core = extract_core(table)
-        per_entry = []
-        for r, rid in enumerate(region_ids):
-            if rid in internal.cccrs:
-                flagged = tuple(n for j, n in enumerate(names)
-                                if n in core.core and flags[r, j] == 1)
-                per_entry.append((rid, flagged))
-        return RootCauseReport(table, core, tuple(per_entry))
+        return internal_root_causes(self.tree, self.attrs, internal)
 
-    # -- driver -------------------------------------------------------------
     def analyze(self) -> AnalysisReport:
-        ext = analyze_external(self.tree, self.meas.cpu_time)
-        cm = crnm(self.meas.wall_time, self.meas.program_wall,
-                  self.meas.cycles, self.meas.instructions)
-        internal = analyze_internal(self.tree, cm)
-        return AnalysisReport(
-            external=ext,
-            internal=internal,
-            external_root_causes=self._external_root_causes(ext),
-            internal_root_causes=self._internal_root_causes(internal),
-        )
+        from .session import analyze_window
+        return analyze_window(self.tree, self.meas, self.attrs)
 
 
 def analyze(tree: RegionTree, measurements: Measurements,
             attributes: Mapping[str, np.ndarray]) -> AnalysisReport:
-    return AutoAnalyzer(tree, measurements, attributes).analyze()
+    """One-shot analysis — a single-window :class:`AnalysisSession`."""
+    from .session import AnalysisSession
+    return AnalysisSession(tree).ingest(measurements, attributes).report

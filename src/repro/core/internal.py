@@ -93,4 +93,4 @@ def attribute_flags(values_per_region: np.ndarray) -> np.ndarray:
     (paper §3.4.3): 1 iff k-means severity is above 'medium'."""
     vals = np.asarray(values_per_region, dtype=np.float64)
     km = severity_classes(vals)
-    return np.asarray([1 if l > 2 else 0 for l in km.labels], dtype=np.int64)
+    return (np.asarray(km.labels, dtype=np.int64) > 2).astype(np.int64)

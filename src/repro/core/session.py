@@ -1,0 +1,217 @@
+"""Streaming analysis sessions: AutoAnalyzer over successive windows.
+
+The paper runs its locate -> root-cause pipeline once, over a whole run.
+For continuous (production) analysis we instead consume *windows* of a live
+run — each window is one ``WindowSnapshot`` from a windowed
+``RegionRecorder`` (or raw measurement/attribute matrices) — and track how
+bottlenecks evolve: appearing, disappearing, or migrating between regions.
+
+``analyze_window`` is the single-window driver (external clustering + CCCR
+search, CRNM + internal CCCR search, rough-set root causes);
+``core.analyzer.AutoAnalyzer.analyze`` is a thin call into it.
+``AnalysisSession.ingest*`` runs it per window, caches the per-window
+reports (clustering results and decision tables ride along inside them), and
+diffs each window against the previous one.  ``report()`` returns the
+cross-window :class:`SessionReport` timeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .analyzer import (AnalysisReport, Measurements, RootCauseReport,
+                       external_root_causes, internal_root_causes)
+from .external import analyze_external
+from .internal import analyze_internal, crnm
+from .regions import RegionTree
+from .roughset import DecisionTable
+from .vectors import as_matrix
+
+
+def analyze_window(tree: RegionTree, measurements: Measurements,
+                   attributes: Mapping[str, np.ndarray]) -> AnalysisReport:
+    """The paper's full single-window pipeline (§4 driver)."""
+    attrs = {k: as_matrix(v) for k, v in attributes.items()}
+    m, n = as_matrix(measurements.cpu_time).shape
+    for k, v in attrs.items():
+        if v.shape != (m, n):
+            raise ValueError(f"attribute {k} shape {v.shape} != {(m, n)}")
+    ext = analyze_external(tree, measurements.cpu_time)
+    cm = crnm(measurements.wall_time, measurements.program_wall,
+              measurements.cycles, measurements.instructions)
+    internal = analyze_internal(tree, cm)
+    return AnalysisReport(
+        external=ext,
+        internal=internal,
+        external_root_causes=external_root_causes(tree, attrs, ext),
+        internal_root_causes=internal_root_causes(tree, attrs, internal),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowDiff:
+    """Internal/external bottleneck churn between consecutive windows.
+    ``migrated`` pairs a region that vanished with one that appeared in the
+    same step — the usual signature of a bottleneck moving (e.g. after a fix
+    shifts pressure to a sibling phase)."""
+
+    appeared: Tuple[int, ...]              # internal CCCRs new this window
+    disappeared: Tuple[int, ...]           # internal CCCRs gone this window
+    persisted: Tuple[int, ...]             # internal CCCRs in both
+    external_appeared: Tuple[int, ...]
+    external_disappeared: Tuple[int, ...]
+    severity_delta: float                  # change in the external S metric
+    migrated: Tuple[Tuple[int, int], ...]  # (from_rid, to_rid) heuristic pairs
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.appeared or self.disappeared or
+                    self.external_appeared or self.external_disappeared)
+
+
+def diff_reports(prev: Optional[AnalysisReport],
+                 cur: AnalysisReport) -> WindowDiff:
+    prev_int = set(prev.internal.cccrs) if prev else set()
+    prev_ext = set(prev.external.cccrs) if prev else set()
+    cur_int, cur_ext = set(cur.internal.cccrs), set(cur.external.cccrs)
+    appeared = tuple(sorted(cur_int - prev_int))
+    disappeared = tuple(sorted(prev_int - cur_int))
+    prev_s = prev.external.severity if prev else 0.0
+    migrated = tuple(zip(disappeared, appeared))
+    return WindowDiff(
+        appeared=appeared, disappeared=disappeared,
+        persisted=tuple(sorted(cur_int & prev_int)),
+        external_appeared=tuple(sorted(cur_ext - prev_ext)),
+        external_disappeared=tuple(sorted(prev_ext - cur_ext)),
+        severity_delta=float(cur.external.severity - prev_s),
+        migrated=migrated)
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowEntry:
+    """One analyzed window: the full report (with its clustering result and
+    rough-set decision tables cached inside) plus the diff vs the previous
+    window."""
+
+    index: int
+    label: Optional[str]
+    report: AnalysisReport
+    diff: WindowDiff
+
+    @property
+    def clustering(self):
+        return self.report.external.clustering
+
+    @property
+    def decision_tables(self) -> Dict[str, DecisionTable]:
+        out: Dict[str, DecisionTable] = {}
+        if self.report.external_root_causes:
+            out["external"] = self.report.external_root_causes.table
+        if self.report.internal_root_causes:
+            out["internal"] = self.report.internal_root_causes.table
+        return out
+
+    def title(self) -> str:
+        return self.label or f"window {self.index}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionReport:
+    """Cross-window timeline of a streaming analysis session."""
+
+    windows: Tuple[WindowEntry, ...]
+
+    def bottleneck_timeline(self) -> Dict[int, Tuple[int, ...]]:
+        """region id -> indices of windows where it was an internal CCCR."""
+        out: Dict[int, List[int]] = {}
+        for w in self.windows:
+            for rid in w.report.internal.cccrs:
+                out.setdefault(rid, []).append(w.index)
+        return {rid: tuple(ws) for rid, ws in out.items()}
+
+    def first_window(self, rid: int) -> Optional[int]:
+        """First window in which ``rid`` was flagged as an internal CCCR."""
+        tl = self.bottleneck_timeline().get(rid)
+        return tl[0] if tl else None
+
+    def render(self, tree: Optional[RegionTree] = None) -> str:
+        nm = (lambda r: tree.name(r)) if tree is not None else (lambda r: f"region {r}")
+        lines = [f"=== analysis session: {len(self.windows)} window(s) ==="]
+        for w in self.windows:
+            ints = ", ".join(nm(r) for r in w.report.internal.cccrs) or "(none)"
+            exts = ", ".join(nm(r) for r in w.report.external.cccrs)
+            line = (f"[{w.title()}] S={w.report.external.severity:.4f} "
+                    f"internal: {ints}")
+            if exts:
+                line += f" external: {exts}"
+            marks = []
+            if w.diff.appeared:
+                marks.append("appeared: " + ", ".join(nm(r) for r in w.diff.appeared))
+            if w.diff.disappeared:
+                marks.append("disappeared: " + ", ".join(nm(r) for r in w.diff.disappeared))
+            if w.diff.migrated:
+                marks.append("migrated: " + ", ".join(
+                    f"{nm(a)}->{nm(b)}" for a, b in w.diff.migrated))
+            if marks:
+                line += "  [" + "; ".join(marks) + "]"
+            lines.append(line)
+        tl = self.bottleneck_timeline()
+        if tl:
+            lines.append("timeline: " + "; ".join(
+                f"{nm(rid)} in windows {list(ws)}" for rid, ws in sorted(tl.items())))
+        return "\n".join(lines)
+
+
+class AnalysisSession:
+    """Consumes successive window snapshots of a live run and maintains the
+    per-window reports + cross-window diffs.  ``keep_windows`` bounds memory
+    for long sessions (oldest entries are dropped; indices keep counting)."""
+
+    def __init__(self, tree: RegionTree, keep_windows: Optional[int] = None):
+        self.tree = tree
+        self.keep_windows = keep_windows
+        self._entries: List[WindowEntry] = []
+        self._next_index = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def latest(self) -> Optional[WindowEntry]:
+        return self._entries[-1] if self._entries else None
+
+    @property
+    def windows(self) -> Tuple[WindowEntry, ...]:
+        return tuple(self._entries)
+
+    # -- ingestion -----------------------------------------------------------
+    def ingest(self, measurements: Measurements,
+               attributes: Mapping[str, np.ndarray],
+               label: Optional[str] = None) -> WindowEntry:
+        """Analyze one window of raw matrices and append it to the timeline."""
+        report = analyze_window(self.tree, measurements, attributes)
+        prev = self._entries[-1].report if self._entries else None
+        entry = WindowEntry(self._next_index, label, report,
+                            diff_reports(prev, report))
+        self._next_index += 1
+        self._entries.append(entry)
+        if self.keep_windows is not None and len(self._entries) > self.keep_windows:
+            del self._entries[:len(self._entries) - self.keep_windows]
+        return entry
+
+    def ingest_snapshot(self, snap, label: Optional[str] = None) -> WindowEntry:
+        """Analyze a ``perfdbg.recorder.WindowSnapshot``."""
+        return self.ingest(snap.measurements(), snap.attributes(),
+                           label=label or snap.label)
+
+    def ingest_recorder(self, recorder, label: Optional[str] = None
+                        ) -> WindowEntry:
+        """Freeze the recorder's live window, reset it, and analyze it —
+        the one-call streaming step for training/serving loops."""
+        return self.ingest_snapshot(recorder.reset_window(), label=label)
+
+    # -- reporting -----------------------------------------------------------
+    def report(self) -> SessionReport:
+        return SessionReport(tuple(self._entries))

@@ -1,0 +1,6 @@
+"""Pallas version compatibility: jax < 0.5 ships the TPU compiler-params
+type as ``TPUCompilerParams``; newer pallas renamed it ``CompilerParams``."""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, s_scr,
                  *, block_t: int):
@@ -73,7 +75,7 @@ def wkv6_kernel(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
         out_specs=pl.BlockSpec((1, block_t, dh), lambda b, _, ti: (b, ti, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, T, dh), r.dtype),
         scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, logw, u.reshape(BH, 1, dh), s0)

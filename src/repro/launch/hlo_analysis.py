@@ -146,23 +146,40 @@ def parse_module(hlo: str) -> Dict[str, Computation]:
 
 
 def _operands(line: str) -> List[str]:
-    inner = line.split("(", 1)[1]
-    depth, buf, out = 1, "", []
+    """Operand names of an op line.  Handles both bare operands
+    (``dot(%a, %b)``) and the typed form newer XLA prints
+    (``dot(f32[128,64]{1,0} %a, ...)``) whose shape commas must not split.
+    The operand list starts at the paren after the opcode — for tuple-typed
+    results the first '(' in the line is the result type, not the call."""
+    m = _OP_RE.match(line)
+    inner = line[m.end():] if m else line.split("(", 1)[1]
+    pdepth, bdepth = 1, 0      # parens; brackets+braces (shape/layout commas)
+    buf, toks = "", []
     for ch in inner:
         if ch == "(":
-            depth += 1
+            pdepth += 1
         elif ch == ")":
-            depth -= 1
-            if depth == 0:
+            pdepth -= 1
+            if pdepth == 0:
                 break
-        if depth >= 1:
+        elif ch in "[{":
+            bdepth += 1
+        elif ch in "]}":
+            bdepth -= 1
+        if ch == "," and pdepth == 1 and bdepth == 0:
+            toks.append(buf)
+            buf = ""
+        else:
             buf += ch
-    for tok in buf.split(","):
-        tok = tok.strip()
-        if tok.startswith("%"):
-            out.append(tok[1:])
-        elif re.match(r"^[\w.\-]+$", tok):
-            out.append(tok)
+    if buf.strip():
+        toks.append(buf)
+    out = []
+    for tok in toks:
+        m = re.search(r"%([\w.\-]+)\s*$", tok.strip())
+        if m:
+            out.append(m.group(1))
+        elif re.match(r"^[\w.\-]+$", tok.strip()):
+            out.append(tok.strip())
     return out
 
 

@@ -1,10 +1,16 @@
-"""Training driver: instrumented, fault-tolerant, analyzer-integrated.
+"""Training driver: instrumented, fault-tolerant, streaming-analyzed.
 
     PYTHONPATH=src python -m repro.launch.train --arch yi-34b --reduced \
         --steps 30 --batch 4 --seq 128 --ckpt-dir /tmp/ckpt --analyze-every 10
 
 Features exercised end-to-end (CPU-sized here, mesh-parametric for pods):
-  * region-instrumented step (data / step / checkpoint) feeding AutoAnalyzer
+  * region-instrumented step (data / step / checkpoint) feeding an
+    AnalysisSession: every --analyze-every steps the recorder's live window
+    is frozen, analyzed, and diffed against the previous window, so a
+    bottleneck appearing mid-run is flagged in the window it appears
+  * --schema selects the attribute set (paper PAPI-era vs tpu roofline)
+  * --inject-bottleneck-at N burns CPU in the data region from step N
+    (a synthetic mid-run regression for exercising the streaming analyzer)
   * periodic + final checkpoints (atomic, async), auto-restart from latest
   * straggler policy hook (needs >1 shard to trigger; wired regardless)
   * deterministic data pipeline whose state lives in the checkpoint
@@ -30,20 +36,28 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
-    ap.add_argument("--analyze-every", type=int, default=10)
+    ap.add_argument("--analyze-every", type=int, default=10,
+                    help="window length in steps for the streaming analyzer")
+    ap.add_argument("--schema", default="paper", choices=("paper", "tpu"),
+                    help="attribute schema for the recorder")
+    ap.add_argument("--inject-bottleneck-at", type=int, default=0,
+                    help="if >0, burn CPU in the data region from this step "
+                         "(synthetic mid-run bottleneck)")
+    ap.add_argument("--inject-ms", type=float, default=30.0)
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args(argv)
 
     import jax
     import jax.numpy as jnp
     from repro.configs import reduced_config, get_config
-    from repro.core import RegionTree
+    from repro.core import AnalysisSession, RegionTree
     from repro.data.pipeline import SyntheticTokens
     from repro.launch.mesh import make_host_mesh
     from repro.launch import steps as steps_lib
     from repro.models.model import input_specs
     from repro.optim import adamw
     from repro.perfdbg import Instrumenter, RegionRecorder, detect
+    from repro.perfdbg.attributes import RIDGE_INTENSITY
     from repro.ckpt import checkpoint as ckpt
 
     overrides = dict(d_model=args.d_model,
@@ -87,41 +101,85 @@ def main(argv=None) -> int:
     tree = RegionTree("train")
     for nm in ("data", "step", "checkpoint"):
         tree.add(nm)
-    rec = RegionRecorder(tree, n_ranks=1)
+    rec = RegionRecorder(tree, n_ranks=1, schema=args.schema)
     ins = Instrumenter(rec, rank=0)
+    session = AnalysisSession(tree)
 
     tokens_per_step = args.batch * args.seq
     flops_per_step = 6 * cfg.active_params() * tokens_per_step
+    # per-region attribute kwargs, keyed by the recorder's schema
+    if args.schema == "tpu":
+        # rough HBM traffic estimate: params touched twice (fwd+bwd reads)
+        # plus activations; only the ratio to flops matters for the flags
+        bytes_per_step = 2.0 * cfg.total_params() * 2 \
+            + 8.0 * tokens_per_step * cfg.d_model * cfg.n_layers
+        hbm_b = float(np.clip(
+            1.0 - (flops_per_step / max(bytes_per_step, 1.0)) / RIDGE_INTENSITY,
+            0.0, 1.0))
+        data_kw = dict(host_io_bytes=tokens_per_step * 8)
+        step_kw = dict(hbm_boundedness=hbm_b, vmem_pressure=0.5 * hbm_b,
+                       collective_bytes=0.0)
+        ckpt_kw = lambda active: dict(host_io_bytes=float(active))
+    else:
+        data_kw = dict(disk_io=tokens_per_step * 8)
+        step_kw = {}
+        ckpt_kw = lambda active: dict(disk_io=float(active))
+
+    def burn(ms: float) -> None:
+        t_end = time.perf_counter() + ms / 1e3
+        while time.perf_counter() < t_end:
+            np.dot(np.ones(256), np.ones(256))
+
+    def flush_window(last_step: int, win_start: int):
+        assert rec.within_paper_budget()
+        entry = session.ingest_recorder(
+            rec, label=f"steps {win_start + 1}-{last_step + 1}")
+        verdict = detect(entry.report)
+        line = (f"[window {entry.index}] steps {win_start + 1}-{last_step + 1} "
+                f"internal: {[tree.name(r) for r in entry.report.internal.cccrs]}")
+        if entry.diff.appeared:
+            line += (" | appeared: "
+                     f"{[tree.name(r) for r in entry.diff.appeared]}")
+        if entry.diff.disappeared:
+            line += (" | disappeared: "
+                     f"{[tree.name(r) for r in entry.diff.disappeared]}")
+        print(line + f" | {verdict.render().splitlines()[0]}", flush=True)
+        return entry
+
     data.start_prefetch()
     losses = []
+    win_start = start_step
     with mesh:
         for step in range(start_step, args.steps):
             with ins.program():
-                with ins.region("data", instructions=tokens_per_step,
-                                disk_io=tokens_per_step * 8):
+                with ins.region("data", nominal_cpi=1.0, **data_kw):
+                    if args.inject_bottleneck_at and \
+                            step + 1 >= args.inject_bottleneck_at:
+                        burn(args.inject_ms)
                     batch = data.next_prefetched()
                     batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                with ins.region("step", instructions=flops_per_step):
+                with ins.region("step", instructions=flops_per_step,
+                                **step_kw):
                     state, metrics = jitted(state, batch)
                     loss = float(metrics["loss"])
-                with ins.region("checkpoint",
-                                disk_io=0 if not saver else 1):
+                with ins.region("checkpoint", nominal_cpi=1.0,
+                                **ckpt_kw(0 if not saver else 1)):
                     if saver and (step + 1) % args.ckpt_every == 0:
                         saver.save(step + 1, {"state": state,
                                               "data": data.state_dict()})
             losses.append(loss)
             if (step + 1) % max(args.analyze_every, 1) == 0:
-                rep = rec.analyze()
-                verdict = detect(rep)
+                flush_window(step, win_start)
+                win_start = step + 1
                 print(f"[step {step+1}] loss={loss:.4f} "
-                      f"gnorm={float(metrics['grad_norm']):.3f} | "
-                      f"internal bottleneck regions: "
-                      f"{[tree.name(r) for r in rep.internal.cccrs]} | "
-                      f"{verdict.render().splitlines()[0]}", flush=True)
+                      f"gnorm={float(metrics['grad_norm']):.3f}", flush=True)
             elif (step + 1) % 5 == 0:
                 print(f"[step {step+1}] loss={loss:.4f}", flush=True)
+        if win_start < args.steps:   # trailing partial window
+            flush_window(args.steps - 1, win_start)
 
     data.stop_prefetch()
+    print(session.report().render(tree), flush=True)
     if saver:
         saver.save(args.steps, {"state": state, "data": data.state_dict()})
         saver.wait()

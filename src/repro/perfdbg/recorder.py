@@ -1,84 +1,176 @@
 """Per-shard, per-region performance records — the paper's lightweight
-data layout.
+data layout, schema-driven and windowed.
 
 The paper's headline claim: for n code regions x m processes AutoAnalyzer
 collects and analyzes at most **125*n*m bytes**, of which ~33% (the
 application-layer timing fields) suffice to *locate* bottlenecks and the
 rest is only consulted for root-cause analysis.  We mirror that contract
-with a fixed 96-byte packed record:
+with a packed record generated from an :class:`AttributeSchema`
+(``perfdbg.schema``); the default ``paper`` schema is a fixed 96-byte cell:
 
     locate fields  (32 B):  cpu_time  wall_time  cycles  instructions
     attribute fields (40 B): l1_miss_rate l2_miss_rate disk_io net_io instr_attr
     ids / pad      (24 B):  region_id  rank  flags  pad
 
 32 / 96 = 33% — the same proportion the paper reports.
+
+Collection is *windowed* for continuous analysis of long runs: ``snapshot()``
+freezes the live window, ``reset_window()`` pushes it onto a bounded ring and
+starts a fresh one.  Each window independently honours the byte budget, so a
+streaming consumer (``repro.core.session.AnalysisSession``) never holds more
+than 125*n*m bytes per window.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple
+from typing import Deque, Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import Measurements, RegionTree
 
-PAPER_BYTES_PER_CELL = 125
+from .schema import (AttributeField, AttributeSchema, LOCATE_FIELDS as _LOCATE,
+                     PAPER_BYTES_PER_CELL, PAPER_SCHEMA, SUM, WMEAN, get_schema)
 
-RECORD_DTYPE = np.dtype([
-    # -- locate fields (33%) --
-    ("cpu_time", "<f8"), ("wall_time", "<f8"),
-    ("cycles", "<f8"), ("instructions", "<f8"),
-    # -- root-cause attributes --
-    ("l1_miss_rate", "<f8"), ("l2_miss_rate", "<f8"),
-    ("disk_io", "<f8"), ("network_io", "<f8"), ("instr_attr", "<f8"),
-    # -- ids --
-    ("region_id", "<u2"), ("rank", "<u4"), ("flags", "<u2"),
-    ("_pad", "<V16"),
-])
+LOCATE_FIELDS = _LOCATE
+
+# Back-compat names: the paper schema's layout and attribute columns.
+RECORD_DTYPE = PAPER_SCHEMA.dtype()
+ATTR_FIELDS = PAPER_SCHEMA.attr_names
 assert RECORD_DTYPE.itemsize == 96
 
-LOCATE_FIELDS = ("cpu_time", "wall_time", "cycles", "instructions")
-ATTR_FIELDS = ("l1_miss_rate", "l2_miss_rate", "disk_io", "network_io",
-               "instr_attr")
+
+def _measurements(data: np.ndarray, program_wall: np.ndarray) -> Measurements:
+    def field(name):
+        return data[name].astype(np.float64)
+    pw = np.asarray(program_wall, dtype=np.float64).copy()
+    if not pw.any():
+        pw = field("wall_time").sum(axis=1)
+    return Measurements(cpu_time=field("cpu_time"), wall_time=field("wall_time"),
+                        program_wall=pw, cycles=field("cycles"),
+                        instructions=field("instructions"))
+
+
+def _attributes(schema: AttributeSchema, data: np.ndarray) -> Dict[str, np.ndarray]:
+    return {f.export_name: data[f.name].astype(np.float64)
+            for f in schema.fields}
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSnapshot:
+    """A frozen collection window: the packed record matrix plus per-rank
+    program wall time.  Cheap to ship (``packed()``) and self-describing
+    enough for ``AnalysisSession`` to consume directly."""
+
+    index: int
+    schema: AttributeSchema
+    tree: RegionTree
+    data: np.ndarray             # (m, n) structured array, schema.dtype()
+    program_wall: np.ndarray     # (m,)
+    label: Optional[str] = None
+
+    def measurements(self) -> Measurements:
+        return _measurements(self.data, self.program_wall)
+
+    def attributes(self) -> Dict[str, np.ndarray]:
+        return _attributes(self.schema, self.data)
+
+    def packed(self) -> bytes:
+        return self.data.tobytes()
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.nbytes
 
 
 class RegionRecorder:
-    """Accumulates per-(rank, region) metrics across a run (or a window of
-    training steps) and exports the matrices ``repro.core`` consumes."""
+    """Accumulates per-(rank, region) metrics for the live window and exports
+    the matrices ``repro.core`` consumes.  ``schema`` selects the attribute
+    set (a registered name or an :class:`AttributeSchema`)."""
 
-    def __init__(self, tree: RegionTree, n_ranks: int):
+    def __init__(self, tree: RegionTree, n_ranks: int,
+                 schema: Union[str, AttributeSchema] = "paper",
+                 max_windows: int = 16):
         self.tree = tree
         self.n_ranks = n_ranks
+        self.schema = get_schema(schema) if isinstance(schema, str) else schema
+        self.dtype = self.schema.dtype()
         self._cols: Dict[int, int] = {rid: i for i, rid in enumerate(tree.ids())}
-        n = len(tree)
-        self._data = np.zeros((n_ranks, n), dtype=RECORD_DTYPE)
-        for rank in range(n_ranks):
+        self._windows: Deque[WindowSnapshot] = collections.deque(
+            maxlen=max_windows)
+        self.window_index = 0
+        self._init_window()
+
+    def _init_window(self) -> None:
+        n = len(self.tree)
+        self._data = np.zeros((self.n_ranks, n), dtype=self.dtype)
+        for rank in range(self.n_ranks):
             for rid, col in self._cols.items():
                 self._data[rank, col]["region_id"] = rid
                 self._data[rank, col]["rank"] = rank
-        self.program_wall = np.zeros(n_ranks)
+        self.program_wall = np.zeros(self.n_ranks)
+        # weights for WMEAN fields live outside the packed record: the record
+        # stores the running mean itself, so the packed round-trip is exact.
+        self._wmean_w = {f.name: np.zeros((self.n_ranks, n))
+                         for f in self.schema.wmean_fields}
 
     # -- recording ---------------------------------------------------------
     def add(self, rank: int, region: int, *, cpu_time: float = 0.0,
             wall_time: float = 0.0, cycles: float = 0.0,
-            instructions: float = 0.0, l1_miss_rate: Optional[float] = None,
-            l2_miss_rate: Optional[float] = None, disk_io: float = 0.0,
-            network_io: float = 0.0) -> None:
+            instructions: float = 0.0, **attrs: Optional[float]) -> None:
+        """Accumulate one observation.  Keyword attributes must belong to the
+        recorder's schema; ``None`` values are skipped (field not measured
+        this call).  SUM fields accumulate; WMEAN fields fold into a
+        duration-weighted running mean (weight = wall time, falling back to
+        CPU time, then 1)."""
         cell = self._data[rank, self._cols[region]]
         cell["cpu_time"] += cpu_time
         cell["wall_time"] += wall_time
         cell["cycles"] += cycles
         cell["instructions"] += instructions
-        cell["instr_attr"] += instructions
-        if l1_miss_rate is not None:
-            cell["l1_miss_rate"] = l1_miss_rate
-        if l2_miss_rate is not None:
-            cell["l2_miss_rate"] = l2_miss_rate
-        cell["disk_io"] += disk_io
-        cell["network_io"] += network_io
+        locate = {"cpu_time": cpu_time, "wall_time": wall_time,
+                  "cycles": cycles, "instructions": instructions}
+        unknown = set(attrs) - set(self.schema.attr_names)
+        if unknown:
+            raise TypeError(f"unknown attribute(s) {sorted(unknown)} for "
+                            f"schema {self.schema.name!r}")
+        w = wall_time if wall_time > 0 else (cpu_time if cpu_time > 0 else 1.0)
+        for f in self.schema.fields:
+            val = attrs.get(f.name)
+            if val is None and f.source is not None:
+                val = locate[f.source]
+            if val is None:
+                continue
+            if f.reduction == SUM:
+                cell[f.name] += val
+            else:  # WMEAN — Welford-style update: exact for constant values
+                wp = self._wmean_w[f.name][rank, self._cols[region]]
+                cell[f.name] += (val - cell[f.name]) * (w / (wp + w))
+                self._wmean_w[f.name][rank, self._cols[region]] = wp + w
 
     def add_program_wall(self, rank: int, wall: float) -> None:
         self.program_wall[rank] += wall
+
+    # -- windows -------------------------------------------------------------
+    def snapshot(self, label: Optional[str] = None) -> WindowSnapshot:
+        """Freeze the live window (no reset)."""
+        return WindowSnapshot(self.window_index, self.schema, self.tree,
+                              self._data.copy(), self.program_wall.copy(),
+                              label)
+
+    def reset_window(self) -> WindowSnapshot:
+        """Push the live window onto the ring and start a fresh one.
+        Returns the frozen window."""
+        snap = self.snapshot()
+        self._windows.append(snap)
+        self.window_index += 1
+        self._init_window()
+        return snap
+
+    def windows(self) -> Tuple[WindowSnapshot, ...]:
+        """Frozen windows still in the ring (oldest first)."""
+        return tuple(self._windows)
 
     # -- the 125*n*m contract ------------------------------------------------
     def packed(self) -> bytes:
@@ -92,39 +184,32 @@ class RegionRecorder:
         return self.packed_size() <= PAPER_BYTES_PER_CELL * n * m
 
     @classmethod
-    def from_packed(cls, tree: RegionTree, n_ranks: int, blob: bytes
+    def from_packed(cls, tree: RegionTree, n_ranks: int, blob: bytes,
+                    schema: Union[str, AttributeSchema] = "paper"
                     ) -> "RegionRecorder":
-        rec = cls(tree, n_ranks)
-        arr = np.frombuffer(blob, dtype=RECORD_DTYPE).reshape(n_ranks, len(tree))
+        rec = cls(tree, n_ranks, schema=schema)
+        arr = np.frombuffer(blob, dtype=rec.dtype).reshape(n_ranks, len(tree))
         rec._data = arr.copy()
+        # WMEAN weights accumulate wall time per add; reconstruct them from
+        # the restored wall times so later adds fold into (not overwrite)
+        # the shipped running means.  A zero stored mean is treated as
+        # never-measured (weight 0) so unmeasured fields don't dilute later
+        # adds toward a phantom 0.0 baseline.
+        wall = rec._data["wall_time"].astype(np.float64)
+        for f in rec.schema.wmean_fields:
+            vals = rec._data[f.name].astype(np.float64)
+            rec._wmean_w[f.name] = np.where(vals != 0.0, wall, 0.0)
         return rec
 
     # -- export -------------------------------------------------------------
-    def _field(self, name: str) -> np.ndarray:
-        return self._data[name].astype(np.float64)
-
     def measurements(self) -> Measurements:
-        pw = self.program_wall.copy()
-        if not pw.any():
-            pw = self._field("wall_time").sum(axis=1)
-        return Measurements(
-            cpu_time=self._field("cpu_time"),
-            wall_time=self._field("wall_time"),
-            program_wall=pw,
-            cycles=self._field("cycles"),
-            instructions=self._field("instructions"),
-        )
+        return _measurements(self._data, self.program_wall)
 
     def attributes(self) -> Dict[str, np.ndarray]:
-        return {
-            "l1_miss_rate": self._field("l1_miss_rate"),
-            "l2_miss_rate": self._field("l2_miss_rate"),
-            "disk_io": self._field("disk_io"),
-            "network_io": self._field("network_io"),
-            "instructions": self._field("instr_attr"),
-        }
+        return _attributes(self.schema, self._data)
 
     def analyze(self):
-        from repro.core import AutoAnalyzer
-        return AutoAnalyzer(self.tree, self.measurements(),
-                            self.attributes()).analyze()
+        """Single-window analysis of the live window (does not reset)."""
+        from repro.core.session import AnalysisSession
+        return AnalysisSession(self.tree).ingest_snapshot(
+            self.snapshot()).report

@@ -1,0 +1,183 @@
+"""Schema-driven metric records (the paper's 125*n*m contract, generalized).
+
+The original paper fixes five PAPI attributes; the follow-up work (arXiv
+1103.6087) generalizes the attribute set.  An :class:`AttributeSchema` names
+the root-cause attribute fields collected next to the fixed *locate* fields
+(cpu_time / wall_time / cycles / instructions — the ~33% of the record that
+suffices to locate bottlenecks) and generates the packed ``np.dtype`` for
+``RegionRecorder``.
+
+Two schemas ship built in:
+
+    ``paper``  — the five PAPI-era attributes (L1/L2 miss rate, disk I/O,
+                 network I/O, instruction count).
+    ``tpu``    — the roofline-derived set from ``perfdbg.attributes``
+                 (vmem pressure, HBM boundedness, host-I/O bytes,
+                 collective bytes, HLO flops).
+
+Every registered schema is checked against the paper's byte budget: a packed
+cell may not exceed :data:`PAPER_BYTES_PER_CELL` (125) bytes, so a full
+collection stays within 125*n*m bytes for n regions x m processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+PAPER_BYTES_PER_CELL = 125
+
+#: Fixed locate fields — the application-layer timing block the paper uses to
+#: *locate* bottlenecks (about a third of the record).
+LOCATE_FIELDS = ("cpu_time", "wall_time", "cycles", "instructions")
+
+#: Field reductions: how repeated ``add`` calls on the same (rank, region)
+#: cell combine.
+SUM = "sum"      # plain accumulation (bytes, counts)
+WMEAN = "wmean"  # duration-weighted running mean (rates / ratios)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttributeField:
+    """One root-cause attribute column of the packed record.
+
+    ``reduction`` selects accumulation semantics (SUM or WMEAN).  ``source``
+    optionally names a locate field whose value feeds this attribute
+    automatically on every ``add`` (e.g. the paper's ``instr_attr`` mirror of
+    the ``instructions`` locate field), unless an explicit value is given.
+    ``export`` is the name under which the field appears in
+    ``RegionRecorder.attributes()`` (defaults to ``name``).
+    """
+
+    name: str
+    reduction: str = SUM
+    source: Optional[str] = None
+    export: Optional[str] = None
+
+    def __post_init__(self):
+        if self.reduction not in (SUM, WMEAN):
+            raise ValueError(f"unknown reduction {self.reduction!r}")
+        if self.source is not None and self.source not in LOCATE_FIELDS:
+            raise ValueError(f"source must be a locate field, got {self.source!r}")
+
+    @property
+    def export_name(self) -> str:
+        return self.export or self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class AttributeSchema:
+    """Named attribute set + generated packed record layout."""
+
+    name: str
+    fields: Tuple[AttributeField, ...]
+
+    def __post_init__(self):
+        names = [f.name for f in self.fields]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate attribute field in schema {self.name!r}")
+        if set(names) & set(LOCATE_FIELDS):
+            raise ValueError("attribute fields may not shadow locate fields")
+
+    # -- layout -------------------------------------------------------------
+    def dtype(self) -> np.dtype:
+        """Packed per-(rank, region) record: locate block, attribute block,
+        id block, padded so the locate block is <= 1/3 of the record (the
+        paper reports locating needs only ~33% of the collected bytes)."""
+        entries = [(f, "<f8") for f in LOCATE_FIELDS]
+        entries += [(f.name, "<f8") for f in self.fields]
+        entries += [("region_id", "<u2"), ("rank", "<u4"), ("flags", "<u2")]
+        raw = sum(np.dtype(t).itemsize for _, t in entries)
+        locate_bytes = 8 * len(LOCATE_FIELDS)
+        pad = max(0, 3 * locate_bytes - raw)
+        if pad:
+            entries.append(("_pad", f"<V{pad}"))
+        dt = np.dtype(entries)
+        return dt
+
+    def bytes_per_cell(self) -> int:
+        return self.dtype().itemsize
+
+    def within_budget(self) -> bool:
+        """The paper's headline contract, per cell: <= 125 bytes."""
+        return self.bytes_per_cell() <= PAPER_BYTES_PER_CELL
+
+    # -- field views ---------------------------------------------------------
+    @property
+    def attr_names(self) -> Tuple[str, ...]:
+        return tuple(f.name for f in self.fields)
+
+    @property
+    def export_names(self) -> Tuple[str, ...]:
+        return tuple(f.export_name for f in self.fields)
+
+    @property
+    def wmean_fields(self) -> Tuple[AttributeField, ...]:
+        return tuple(f for f in self.fields if f.reduction == WMEAN)
+
+    def field(self, name: str) -> AttributeField:
+        for f in self.fields:
+            if f.name == name:
+                return f
+        raise KeyError(f"schema {self.name!r} has no attribute field {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, AttributeSchema] = {}
+
+
+def register_schema(schema: AttributeSchema) -> AttributeSchema:
+    """Register a schema after enforcing the 125*n*m byte budget."""
+    if not schema.within_budget():
+        raise ValueError(
+            f"schema {schema.name!r} packs {schema.bytes_per_cell()} bytes per "
+            f"cell, over the paper's {PAPER_BYTES_PER_CELL}-byte budget")
+    _REGISTRY[schema.name] = schema
+    return schema
+
+
+def get_schema(name: str) -> AttributeSchema:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown attribute schema {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def list_schemas() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Built-ins
+# ---------------------------------------------------------------------------
+
+#: The paper's five PAPI-era attributes.  Miss *rates* combine as
+#: duration-weighted means (a multi-call region's rate is not the last call's
+#: rate); I/O byte counts and instruction counts sum.  ``instr_attr`` mirrors
+#: the ``instructions`` locate field so root-cause tables can consult it
+#: without re-reading the locate block.
+PAPER_SCHEMA = register_schema(AttributeSchema("paper", (
+    AttributeField("l1_miss_rate", WMEAN),
+    AttributeField("l2_miss_rate", WMEAN),
+    AttributeField("disk_io", SUM),
+    AttributeField("network_io", SUM),
+    AttributeField("instr_attr", SUM, source="instructions",
+                   export="instructions"),
+)))
+
+#: The TPU/roofline adaptation (see perfdbg.attributes for the derivation):
+#: pressure/boundedness ratios are rates (weighted means); byte counters and
+#: HLO flops sum.  ``hlo_flops`` mirrors ``instructions`` — workloads record
+#: analytic flop counts there.
+TPU_SCHEMA = register_schema(AttributeSchema("tpu", (
+    AttributeField("vmem_pressure", WMEAN),
+    AttributeField("hbm_boundedness", WMEAN),
+    AttributeField("host_io_bytes", SUM),
+    AttributeField("collective_bytes", SUM),
+    AttributeField("hlo_flops", SUM, source="instructions"),
+)))

@@ -61,6 +61,31 @@ def detect(report: AnalysisReport) -> StragglerVerdict:
                             causes, action)
 
 
+def detect_timeline(session_report) -> Tuple[StragglerVerdict, ...]:
+    """Run straggler detection over every window of a streaming
+    ``core.session.SessionReport`` — one verdict per window, oldest first."""
+    return tuple(detect(w.report) for w in session_report.windows)
+
+
+def persistent_stragglers(verdicts: Sequence[StragglerVerdict],
+                          min_windows: int = 2) -> Tuple[int, ...]:
+    """Ranks that straggled in at least ``min_windows`` *consecutive* windows
+    — the production signal worth acting on (a single-window straggle is
+    usually scheduler noise; a persistent one is a sick host)."""
+    streak: Dict[int, int] = {}
+    flagged = set()
+    for v in verdicts:
+        current = set(v.stragglers)
+        for r in list(streak):
+            if r not in current:
+                del streak[r]
+        for r in current:
+            streak[r] = streak.get(r, 0) + 1
+            if streak[r] >= min_windows:
+                flagged.add(r)
+    return tuple(sorted(flagged))
+
+
 def rebalance_weights(cpu_time_per_rank: np.ndarray) -> np.ndarray:
     """Work-redistribution weights ~ 1 / observed rate (the paper's dynamic
     dispatch: slow ranks get proportionally less of the next window's work).

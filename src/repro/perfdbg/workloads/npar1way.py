@@ -26,8 +26,8 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core import RegionTree
-from ..instrument import Instrumenter
+from repro.core import AnalysisSession, RegionTree
+from ..instrument import CPU_CLOCK, Instrumenter
 from ..recorder import RegionRecorder
 
 
@@ -86,9 +86,9 @@ def run_npar1way(w: NPAR1WAYWorkload) -> Tuple[RegionRecorder, "object", float]:
     def _best_of(fn, reps=3):
         best = float("inf")
         for _ in range(reps):
-            c0 = time.process_time()
+            c0 = CPU_CLOCK()
             fn()
-            best = min(best, time.process_time() - c0)
+            best = min(best, CPU_CLOCK() - c0)
         return best
 
     if w.taus is not None:
@@ -153,5 +153,6 @@ def run_npar1way(w: NPAR1WAYWorkload) -> Tuple[RegionRecorder, "object", float]:
         rank_times.append(time.perf_counter() - t0)
         rec.add_program_wall(rank, rank_times[-1])
 
-    report = rec.analyze()
+    report = AnalysisSession(tree).ingest_snapshot(
+        rec.snapshot(label=w.name)).report
     return rec, report, float(np.max(rank_times))

@@ -1,0 +1,66 @@
+"""Fallback shim used when `hypothesis` is not installed: property tests
+degrade to deterministic fixed-seed example sweeps.
+
+Only the tiny strategy surface the test-suite uses is implemented
+(integers / floats / booleans / sampled_from / lists).  ``@given`` draws
+``max_examples`` (capped) argument tuples from seeded numpy Generators, so a
+green run stays green — no random flakiness, no shrinking.
+"""
+import numpy as np
+
+_MAX_EXAMPLES_CAP = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def settings(max_examples=20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", 20), _MAX_EXAMPLES_CAP)
+            for example in range(n):
+                rng = np.random.default_rng(0xA11CE + example)
+                drawn = tuple(s.draw(rng) for s in strats)
+                fn(*args, *drawn, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,7 +1,10 @@
 """Tests for OPTICS-style density clustering and k-means severity classes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade property tests to fixed-seed example sweeps
+    from _hypo import given, settings, st
 
 from repro.core.kmeans import kmeans_1d, severity_classes
 from repro.core.optics import cluster

@@ -1,0 +1,121 @@
+"""AttributeSchema registry: dtype generation, byte budget, reductions."""
+import numpy as np
+import pytest
+
+from repro.core import RegionTree
+from repro.perfdbg import (AttributeField, AttributeSchema, PAPER_SCHEMA,
+                           RegionRecorder, TPU_SCHEMA, get_schema,
+                           list_schemas, register_schema)
+from repro.perfdbg.schema import (LOCATE_FIELDS, PAPER_BYTES_PER_CELL, SUM,
+                                  WMEAN)
+
+
+def small_tree(n=3):
+    t = RegionTree()
+    for i in range(1, n + 1):
+        t.add(f"r{i}", rid=i)
+    return t
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert "paper" in list_schemas() and "tpu" in list_schemas()
+        assert get_schema("paper") is PAPER_SCHEMA
+        assert get_schema("tpu") is TPU_SCHEMA
+
+    def test_unknown_schema_raises(self):
+        with pytest.raises(KeyError, match="unknown attribute schema"):
+            get_schema("nonexistent")
+
+    def test_over_budget_schema_rejected(self):
+        fat = AttributeSchema("fat", tuple(
+            AttributeField(f"a{i}") for i in range(12)))
+        assert fat.bytes_per_cell() > PAPER_BYTES_PER_CELL
+        with pytest.raises(ValueError, match="byte budget"):
+            register_schema(fat)
+        assert "fat" not in list_schemas()
+
+    def test_custom_schema_roundtrip(self):
+        sch = AttributeSchema("gpu-test", (
+            AttributeField("sm_occupancy", WMEAN),
+            AttributeField("dram_bytes", SUM),
+        ))
+        assert sch.within_budget()
+        rec = RegionRecorder(small_tree(), 2, schema=sch)
+        rec.add(0, 1, wall_time=1.0, sm_occupancy=0.5, dram_bytes=100.0)
+        rec.add(0, 1, wall_time=3.0, sm_occupancy=0.9, dram_bytes=50.0)
+        attrs = rec.attributes()
+        assert attrs["dram_bytes"][0, 0] == 150.0
+        assert attrs["sm_occupancy"][0, 0] == pytest.approx(
+            (0.5 * 1 + 0.9 * 3) / 4)
+
+
+class TestDtypeGeneration:
+    @pytest.mark.parametrize("schema", [PAPER_SCHEMA, TPU_SCHEMA])
+    def test_layout(self, schema):
+        dt = schema.dtype()
+        for f in LOCATE_FIELDS:
+            assert f in dt.names
+        for f in schema.attr_names:
+            assert f in dt.names
+        for f in ("region_id", "rank", "flags"):
+            assert f in dt.names
+        # the locate block stays <= 1/3 of the record (paper: ~33%)
+        locate = sum(dt.fields[f][0].itemsize for f in LOCATE_FIELDS)
+        assert locate / dt.itemsize <= 1 / 3 + 1e-9
+
+    @pytest.mark.parametrize("schema", [PAPER_SCHEMA, TPU_SCHEMA])
+    def test_byte_budget(self, schema):
+        assert schema.within_budget()
+        assert schema.bytes_per_cell() <= PAPER_BYTES_PER_CELL
+        n, m = 7, 32
+        rec = RegionRecorder(small_tree(7), m, schema=schema)
+        assert rec.packed_size() <= PAPER_BYTES_PER_CELL * n * m
+        assert rec.within_paper_budget()
+
+    def test_paper_layout_unchanged(self):
+        """The paper schema keeps the seed's exact 96-byte packed layout."""
+        dt = PAPER_SCHEMA.dtype()
+        assert dt.itemsize == 96
+        assert dt.names == ("cpu_time", "wall_time", "cycles", "instructions",
+                            "l1_miss_rate", "l2_miss_rate", "disk_io",
+                            "network_io", "instr_attr", "region_id", "rank",
+                            "flags", "_pad")
+
+    def test_bad_fields_rejected(self):
+        with pytest.raises(ValueError, match="shadow locate"):
+            AttributeSchema("bad", (AttributeField("cpu_time"),))
+        with pytest.raises(ValueError, match="duplicate"):
+            AttributeSchema("dup", (AttributeField("x"), AttributeField("x")))
+        with pytest.raises(ValueError, match="reduction"):
+            AttributeField("x", reduction="max")
+        with pytest.raises(ValueError, match="locate field"):
+            AttributeField("x", source="not_a_field")
+
+
+class TestReductions:
+    def test_source_field_mirrors_locate(self):
+        rec = RegionRecorder(small_tree(), 1)  # paper: instr_attr <- instructions
+        rec.add(0, 1, instructions=100.0)
+        rec.add(0, 1, instructions=50.0)
+        assert rec.attributes()["instructions"][0, 0] == 150.0
+        assert rec.measurements().instructions[0, 0] == 150.0
+
+    def test_tpu_hlo_flops_mirrors_instructions(self):
+        rec = RegionRecorder(small_tree(), 1, schema="tpu")
+        rec.add(0, 1, instructions=2e12)
+        rec.add(0, 1, instructions=1e12, hlo_flops=5e11)  # explicit override
+        assert rec.attributes()["hlo_flops"][0, 0] == pytest.approx(2.5e12)
+
+    def test_wmean_is_duration_weighted(self):
+        """Multi-call regions report duration-weighted miss rates, not the
+        last call's value (the seed's last-write-wins bug)."""
+        rec = RegionRecorder(small_tree(), 1)
+        rec.add(0, 1, wall_time=9.0, l2_miss_rate=0.10)
+        rec.add(0, 1, wall_time=1.0, l2_miss_rate=0.50)
+        assert rec.attributes()["l2_miss_rate"][0, 0] == pytest.approx(0.14)
+
+    def test_unknown_attribute_rejected(self):
+        rec = RegionRecorder(small_tree(), 1, schema="tpu")
+        with pytest.raises(TypeError, match="disk_io"):
+            rec.add(0, 1, disk_io=1.0)  # paper field, not in tpu schema

@@ -1,0 +1,196 @@
+"""Windowed recorder + streaming AnalysisSession across windows."""
+import numpy as np
+import pytest
+
+from repro.core import AnalysisSession, RegionTree, analyze
+from repro.perfdbg import RegionRecorder, detect_timeline, persistent_stragglers
+
+
+def small_tree(n=3):
+    t = RegionTree()
+    for i in range(1, n + 1):
+        t.add(f"r{i}", rid=i)
+    return t
+
+
+def fill_balanced(rec, n_ranks, rids, cpu=1.0, hot=None):
+    """One window of balanced work; ``hot`` = {rid: factor} inflates regions
+    on every rank (an internal bottleneck, not a straggler)."""
+    hot = hot or {}
+    for r in range(n_ranks):
+        for rid in rids:
+            t = cpu * hot.get(rid, 1.0)
+            rec.add(r, rid, cpu_time=t, wall_time=t, cycles=t * 2e9,
+                    instructions=1e9, l1_miss_rate=0.02, l2_miss_rate=0.01)
+        rec.add_program_wall(r, cpu * len(rids))
+
+
+class TestWindowedRecorder:
+    def test_reset_window_isolates_data(self):
+        rec = RegionRecorder(small_tree(), 2)
+        rec.add(0, 1, cpu_time=5.0)
+        snap0 = rec.reset_window()
+        rec.add(0, 1, cpu_time=1.0)
+        assert snap0.measurements().cpu_time[0, 0] == 5.0
+        assert rec.measurements().cpu_time[0, 0] == 1.0
+        assert rec.window_index == 1
+        assert rec.windows() == (snap0,)
+
+    def test_packed_roundtrip_across_window_boundary(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 2)
+        rec.add(0, 1, cpu_time=1.5, wall_time=2.0, disk_io=42.0,
+                l1_miss_rate=0.25)
+        blob0 = rec.reset_window().packed()
+        rec.add(1, 2, cpu_time=7.0, network_io=8.0)
+        blob1 = rec.snapshot().packed()
+
+        w0 = RegionRecorder.from_packed(t, 2, blob0)
+        w1 = RegionRecorder.from_packed(t, 2, blob1)
+        assert w0.measurements().cpu_time[0, 0] == 1.5
+        assert w0.attributes()["disk_io"][0, 0] == 42.0
+        assert w0.attributes()["l1_miss_rate"][0, 0] == pytest.approx(0.25)
+        assert w1.measurements().cpu_time[0, 0] == 0.0  # window 1 is fresh
+        assert w1.measurements().cpu_time[1, 1] == 7.0
+        assert w1.attributes()["network_io"][1, 1] == 8.0
+
+    def test_from_packed_folds_later_wmean_adds(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 1)
+        rec.add(0, 1, wall_time=3.0, l1_miss_rate=0.3)
+        rec2 = RegionRecorder.from_packed(t, 1, rec.packed())
+        rec2.add(0, 1, wall_time=1.0, l1_miss_rate=0.7)
+        # the shipped mean folds by its reconstructed wall-time weight:
+        # (0.3*3 + 0.7*1) / 4
+        assert rec2.attributes()["l1_miss_rate"][0, 0] == pytest.approx(0.4)
+        # a field never measured before the round-trip carries no phantom
+        # weight: the first add after restore sets it outright
+        rec2.add(0, 1, wall_time=1.0, l2_miss_rate=0.8)
+        assert rec2.attributes()["l2_miss_rate"][0, 0] == pytest.approx(0.8)
+
+    def test_wmean_state_resets_with_window(self):
+        rec = RegionRecorder(small_tree(), 1)
+        rec.add(0, 1, wall_time=100.0, l2_miss_rate=0.9)
+        rec.reset_window()
+        rec.add(0, 1, wall_time=1.0, l2_miss_rate=0.1)
+        # the old window's heavy weight must not drag the new mean
+        assert rec.attributes()["l2_miss_rate"][0, 0] == pytest.approx(0.1)
+
+    def test_window_ring_is_bounded(self):
+        rec = RegionRecorder(small_tree(), 1, max_windows=2)
+        for _ in range(5):
+            rec.reset_window()
+        assert len(rec.windows()) == 2
+        assert [w.index for w in rec.windows()] == [3, 4]
+        assert rec.window_index == 5
+
+    def test_each_window_within_budget(self):
+        rec = RegionRecorder(small_tree(4), 8, schema="tpu")
+        for r in range(8):
+            for rid in (1, 2, 3, 4):
+                rec.add(r, rid, cpu_time=1.0, wall_time=1.0, cycles=2e9,
+                        instructions=1e12, hbm_boundedness=0.4,
+                        collective_bytes=1e6)
+        snap = rec.reset_window()
+        assert snap.nbytes <= 125 * 4 * 8
+        assert rec.within_paper_budget()
+
+
+class TestAnalysisSession:
+    def test_bottleneck_flagged_in_window_it_appears(self):
+        """A synthetic run where region 2 becomes hot in window 2 of 4."""
+        t = small_tree()
+        rec = RegionRecorder(t, 4)
+        session = AnalysisSession(t)
+        for wdx in range(4):
+            hot = {2: 8.0} if wdx >= 2 else {}
+            fill_balanced(rec, 4, (1, 2, 3), hot=hot)
+            session.ingest_recorder(rec, label=f"w{wdx}")
+
+        rep = session.report()
+        assert rep.first_window(2) == 2
+        assert rep.windows[2].diff.appeared == (2,)
+        assert rep.windows[2].diff.disappeared == ()
+        assert rep.windows[3].diff.persisted == (2,)
+        assert rep.windows[3].diff.appeared == ()
+        assert 2 not in rep.windows[0].report.internal.cccrs
+        assert rep.bottleneck_timeline()[2] == (2, 3)
+        rendered = rep.render(t)
+        assert "appeared: r2" in rendered and "4 window" in rendered
+
+    def test_disappearing_and_migrating_bottleneck(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 4)
+        session = AnalysisSession(t)
+        for hot in ({1: 8.0}, {3: 8.0}):
+            fill_balanced(rec, 4, (1, 2, 3), hot=hot)
+            session.ingest_recorder(rec)
+        d = session.latest.diff
+        assert d.appeared == (3,) and d.disappeared == (1,)
+        assert d.migrated == ((1, 3),)
+        assert d.changed
+
+    def test_session_over_tpu_schema_windows(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 4, schema="tpu")
+        session = AnalysisSession(t)
+        for wdx in range(3):
+            for r in range(4):
+                for rid in (1, 2, 3):
+                    cpu = 1.0 * (6.0 if (wdx == 2 and rid == 3) else 1.0)
+                    rec.add(r, rid, cpu_time=cpu, wall_time=cpu,
+                            cycles=cpu * 2e9, instructions=1e12,
+                            hbm_boundedness=0.3, vmem_pressure=0.1,
+                            collective_bytes=1e6, host_io_bytes=0.0)
+                rec.add_program_wall(r, 3.0)
+            assert rec.within_paper_budget()
+            session.ingest_recorder(rec)
+        assert session.report().first_window(3) == 2
+
+    def test_keep_windows_bounds_memory_without_renumbering(self):
+        t = small_tree()
+        session = AnalysisSession(t, keep_windows=2)
+        rec = RegionRecorder(t, 2)
+        for _ in range(5):
+            fill_balanced(rec, 2, (1, 2, 3))
+            session.ingest_recorder(rec)
+        assert len(session) == 2
+        assert [w.index for w in session.windows] == [3, 4]
+
+    def test_single_window_matches_one_shot_analyze(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 4)
+        fill_balanced(rec, 4, (1, 2, 3), hot={2: 8.0})
+        snap = rec.snapshot()
+        via_session = AnalysisSession(t).ingest_snapshot(snap).report
+        one_shot = analyze(t, snap.measurements(), snap.attributes())
+        assert via_session.internal.cccrs == one_shot.internal.cccrs
+        assert via_session.external.severity == one_shot.external.severity
+
+    def test_decision_tables_cached_on_entry(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 4)
+        fill_balanced(rec, 4, (1, 2, 3), hot={2: 8.0})
+        entry = AnalysisSession(t).ingest_recorder(rec)
+        assert "internal" in entry.decision_tables
+        assert entry.clustering.n_clusters >= 1
+
+
+class TestStragglerTimeline:
+    def test_straggler_tracked_across_windows(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 6)
+        session = AnalysisSession(t)
+        for wdx in range(3):
+            for r in range(6):
+                slow = 3.0 if (wdx >= 1 and r == 5) else 1.0
+                for rid in (1, 2, 3):
+                    rec.add(r, rid, cpu_time=slow, wall_time=slow,
+                            cycles=slow * 2e9, instructions=1e9)
+                rec.add_program_wall(r, slow * 3)
+            session.ingest_recorder(rec)
+        verdicts = detect_timeline(session.report())
+        assert verdicts[0].stragglers == ()
+        assert 5 in verdicts[1].stragglers and 5 in verdicts[2].stragglers
+        assert persistent_stragglers(verdicts, min_windows=2) == (5,)
+        assert persistent_stragglers(verdicts, min_windows=3) == ()

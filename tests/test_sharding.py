@@ -1,7 +1,10 @@
 """Sharding resolver invariants (unit + hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade property tests to fixed-seed example sweeps
+    from _hypo import given, settings, st
 
 import jax
 from jax.sharding import PartitionSpec as P
