@@ -6,8 +6,9 @@
 Runs a reduced config of the chosen architecture, prefills a batch of
 prompts, then decodes ``--tokens`` tokens per request per round.  Each round
 is one collection window: the recorder is frozen and reset, the window is
-fed to an AnalysisSession, and the final report shows the per-window
-timeline (regions: prefill / decode / detokenize).
+handed to an AsyncAnalysisSession (analysis happens off the serving loop;
+``--sync-analysis`` opts back into inline analysis), and the final report
+shows the per-window timeline (regions: prefill / decode / detokenize).
 """
 import argparse
 import time
@@ -17,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced_config
-from repro.core import AnalysisSession, RegionTree
+from repro.core import AnalysisSession, AsyncAnalysisSession, RegionTree
 from repro.models import init_params
 from repro.models.model import decode_step, prefill
 from repro.perfdbg import Instrumenter, RegionRecorder
@@ -33,6 +34,9 @@ def main() -> int:
     ap.add_argument("--rounds", type=int, default=3,
                     help="decode rounds == analysis windows")
     ap.add_argument("--schema", default="paper", choices=("paper", "tpu"))
+    ap.add_argument("--sync-analysis", action="store_true",
+                    help="analyze each round inline instead of on the "
+                         "async worker thread")
     args = ap.parse_args()
     if args.rounds < 1 or args.tokens < 1:
         ap.error("--rounds and --tokens must be >= 1")
@@ -49,7 +53,18 @@ def main() -> int:
         tree.add(nm)
     rec = RegionRecorder(tree, 1, schema=args.schema)
     ins = Instrumenter(rec, 0)
-    session = AnalysisSession(tree)
+
+    def on_window(entry):
+        cccrs = [tree.name(r) for r in entry.report.internal.cccrs]
+        print(f"[{entry.title()}] internal bottlenecks: {cccrs or ['(none)']}")
+
+    if args.sync_analysis:
+        session, pipe = AnalysisSession(tree), None
+    else:
+        # decode rounds only pay the snapshot copy; the analysis worker
+        # drains the (bounded) queue behind the serving loop
+        session, pipe = None, AsyncAnalysisSession(tree, max_queue=4,
+                                                   on_window=on_window)
     io_kw = "host_io_bytes" if args.schema == "tpu" else "disk_io"
 
     prefill_j = jax.jit(lambda p, t: prefill(p, cfg, t, s_buf))
@@ -85,18 +100,20 @@ def main() -> int:
                 _ = np.concatenate(
                     [np.asarray(t) for t in out_tokens[-args.tokens:]], axis=1)
         assert rec.within_paper_budget()
-        entry = session.ingest_recorder(rec, label=f"round {rnd}")
-        cccrs = [tree.name(r) for r in entry.report.internal.cccrs]
-        print(f"[round {rnd}] decoded {args.tokens}/req | "
-              f"internal bottlenecks: {cccrs or ['(none)']}")
+        print(f"[round {rnd}] decoded {args.tokens}/req")
+        if pipe is not None:
+            pipe.submit_recorder(rec, label=f"round {rnd}")
+        else:
+            on_window(session.ingest_recorder(rec, label=f"round {rnd}"))
 
+    report = session.report() if pipe is None else pipe.close()
     seqs = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     print(f"\n[serve] {cfg.name} (reduced, schema={args.schema}): "
           f"batch={args.batch} prompt={args.prompt_len} "
           f"decoded={args.rounds * args.tokens}")
     for b in range(min(args.batch, 2)):
         print(f"  request {b}: {seqs[b].tolist()}")
-    print("\n" + session.report().render(tree))
+    print("\n" + report.render(tree))
     total = args.batch * args.rounds * args.tokens
     tput = total / max(decode_wall, 1e-9)
     print(f"\ndecode throughput: {tput:.1f} tok/s (CPU, interpret-free jnp path)")

@@ -22,13 +22,16 @@ from .regions import ROOT_ID, Region, RegionTree
 from .roughset import (CoreResult, DecisionTable, discernibility_matrix,
                        extract_core, external_decision_table,
                        internal_decision_table, root_causes)
+from .pipeline import (AsyncAnalysisSession, BACKPRESSURE_POLICIES,
+                       PipelineClosed)
 from .session import (AnalysisSession, SessionReport, WindowDiff, WindowEntry,
                       analyze_window, diff_reports)
 from .vectors import (canonical_partition, keep_columns, lengths,
                       pairwise_distances, severity_S, zero_columns)
 
 __all__ = [
-    "AnalysisReport", "AnalysisSession", "AutoAnalyzer", "Measurements",
+    "AnalysisReport", "AnalysisSession", "AsyncAnalysisSession",
+    "BACKPRESSURE_POLICIES", "PipelineClosed", "AutoAnalyzer", "Measurements",
     "PAPER_ATTRIBUTES", "RootCauseReport", "SessionReport", "WindowDiff",
     "WindowEntry", "analyze", "analyze_window", "diff_reports",
     "external_root_causes", "internal_root_causes", "CCRNode", "ExternalReport",

@@ -1,0 +1,201 @@
+"""Off-critical-path analysis: AnalysisSession behind a worker thread.
+
+The paper's pipeline is cheap (clustering over an m x n matrix), but "cheap"
+is still synchronous work on the training step loop.  ``AsyncAnalysisSession``
+moves ingestion onto a single worker thread behind a bounded snapshot queue,
+so a windowed run pays only the ``snapshot()`` copy per window — the paper's
+125*n*m-byte contract is exactly what makes that copy affordable.
+
+Contract:
+
+* ``submit`` / ``submit_recorder`` enqueue a frozen window.  Queue full?
+  ``backpressure`` decides: ``"block"`` waits for the worker (analysis never
+  loses a window; the step loop may stall), ``"drop_oldest"`` evicts the
+  oldest *pending* window (the step loop never stalls; ``dropped`` counts
+  the losses).  Windows are analyzed strictly in submission order, so the
+  resulting ``SessionReport`` is identical to the synchronous session's.
+* ``drain()`` blocks until everything submitted so far is analyzed and
+  returns the current ``SessionReport``.
+* ``close()`` drains, stops the worker, and returns the final report; the
+  session is also a context manager (``with AsyncAnalysisSession(t) as s:``).
+* A crash in the worker (analysis or the ``on_window`` callback) is captured
+  and re-raised from the next ``submit``/``drain``/``close``.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Optional
+
+from .regions import RegionTree
+from .session import AnalysisSession, SessionReport, WindowEntry
+
+BLOCK = "block"
+DROP_OLDEST = "drop_oldest"
+BACKPRESSURE_POLICIES = (BLOCK, DROP_OLDEST)
+
+
+class PipelineClosed(RuntimeError):
+    """submit() after close()."""
+
+
+class AsyncAnalysisSession:
+    """Bounded-queue, single-worker wrapper around :class:`AnalysisSession`.
+
+    ``on_window`` (optional) runs on the worker thread after each window is
+    analyzed — the place for progress lines or window-adaptive policies.
+    Access the wrapped session's state only via ``drain()``/``close()``
+    results (or inside ``on_window``); anything else races the worker.
+    """
+
+    def __init__(self, tree: RegionTree, *, keep_windows: Optional[int] = None,
+                 max_queue: int = 8, backpressure: str = BLOCK,
+                 on_window: Optional[Callable[[WindowEntry], None]] = None,
+                 session: Optional[AnalysisSession] = None):
+        if backpressure not in BACKPRESSURE_POLICIES:
+            raise ValueError(f"backpressure must be one of "
+                             f"{BACKPRESSURE_POLICIES}, got {backpressure!r}")
+        if max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        self.tree = tree
+        self._session = session if session is not None \
+            else AnalysisSession(tree, keep_windows)
+        self._max_queue = max_queue
+        self._policy = backpressure
+        self._on_window = on_window
+        self._q: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._submitted = 0      # windows accepted into the queue
+        self._done = 0           # windows analyzed, dropped, or failed
+        self._dropped = 0
+        self._failed = 0         # ingest (or on_window) raised
+        self._closed = False
+        self._error: Optional[BaseException] = None
+        self._worker = threading.Thread(
+            target=self._run, name="perfdbg-analysis", daemon=True)
+        self._worker.start()
+
+    # -- worker --------------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._q and not self._closed:
+                    self._cv.wait()
+                if not self._q:          # closed and fully drained
+                    return
+                snap, label = self._q.popleft()
+                self._cv.notify_all()    # a blocked producer may proceed
+            err = None
+            ingested = False
+            try:
+                entry = self._session.ingest_snapshot(snap, label=label)
+                ingested = True
+                if self._on_window is not None:
+                    self._on_window(entry)
+            except BaseException as e:   # propagate to the producer side
+                err = e
+            with self._cv:
+                if err is not None:
+                    if not ingested:   # a callback crash still ingested
+                        self._failed += 1
+                    if self._error is None:
+                        self._error = err
+                self._done += 1
+                self._cv.notify_all()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("analysis worker failed") from self._error
+
+    # -- producer side -------------------------------------------------------
+    def submit(self, snap, label: Optional[str] = None) -> None:
+        """Enqueue one frozen window (a ``WindowSnapshot``); the only cost
+        on the caller is the queue append (or a wait under ``block``)."""
+        with self._cv:
+            self._raise_pending()
+            if self._closed:
+                raise PipelineClosed("submit() on a closed pipeline")
+            if self._policy == BLOCK:
+                while len(self._q) >= self._max_queue and not self._closed:
+                    self._cv.wait()
+                self._raise_pending()
+                if self._closed:
+                    raise PipelineClosed("pipeline closed while blocked")
+            else:
+                while len(self._q) >= self._max_queue:
+                    self._q.popleft()
+                    self._dropped += 1
+                    self._done += 1
+            self._q.append((snap, label))
+            self._submitted += 1
+            self._cv.notify_all()
+
+    def submit_recorder(self, recorder, label: Optional[str] = None) -> None:
+        """Freeze + reset the recorder's live window and enqueue it — the
+        async counterpart of ``AnalysisSession.ingest_recorder``."""
+        self.submit(recorder.reset_window(), label=label)
+
+    # -- synchronization -----------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> SessionReport:
+        """Wait until every window submitted so far is analyzed (dropped
+        windows count as handled), then return the session report."""
+        with self._cv:
+            target = self._submitted
+            if not self._cv.wait_for(lambda: self._done >= target,
+                                     timeout=timeout):
+                raise TimeoutError(
+                    f"drain timed out with {target - self._done} window(s) "
+                    f"outstanding")
+            self._raise_pending()
+        return self._session.report()
+
+    def close(self, timeout: Optional[float] = None) -> SessionReport:
+        """Drain, stop the worker, and return the final report.  Idempotent;
+        the backlog is fully analyzed before the worker exits."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        report = self.drain(timeout)
+        self._worker.join(timeout)
+        return report
+
+    def __enter__(self) -> "AsyncAnalysisSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        # on an exception unwind, still stop the worker but let the original
+        # error surface rather than a secondary drain failure
+        try:
+            self.close(timeout=None if exc[0] is None else 5.0)
+        except Exception:
+            if exc[0] is None:
+                raise
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def session(self) -> AnalysisSession:
+        """The wrapped session — safe to touch only after ``close()``."""
+        return self._session
+
+    @property
+    def pending(self) -> int:
+        """Windows queued but not yet analyzed (bounded by ``max_queue``)."""
+        with self._cv:
+            return len(self._q)
+
+    @property
+    def dropped(self) -> int:
+        """Windows evicted under the ``drop_oldest`` policy."""
+        with self._cv:
+            return self._dropped
+
+    @property
+    def submitted(self) -> int:
+        with self._cv:
+            return self._submitted
+
+    @property
+    def analyzed(self) -> int:
+        """Windows actually ingested (excludes drops and failed ingests)."""
+        with self._cv:
+            return self._done - self._dropped - self._failed

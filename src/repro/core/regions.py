@@ -11,7 +11,7 @@ is agnostic: it only models the tree.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 ROOT_ID = 0
 
@@ -113,6 +113,34 @@ class RegionTree:
             cur = self._regions[cur].parent
             rev.append(cur)
         return tuple(reversed(rev))
+
+    # -- identity ----------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable digest of the tree's structure (rids, names, parentage).
+        Snapshot transport uses it to check that two shards were recorded
+        against the same instrumented region layout."""
+        import hashlib
+        spec = [self._regions[ROOT_ID].name] + [
+            (r.rid, r.name, r.parent)
+            for r in (self._regions[i] for i in sorted(self._regions))
+            if r.rid != ROOT_ID]
+        return hashlib.sha256(repr(spec).encode()).hexdigest()[:16]
+
+    def to_spec(self) -> dict:
+        """JSON-serializable structure (for self-describing wire headers).
+        Insertion order is preserved so parents precede children on rebuild."""
+        regs = [r for i, r in self._regions.items() if i != ROOT_ID]
+        return {"root": self._regions[ROOT_ID].name,
+                "rids": [r.rid for r in regs],
+                "names": [r.name for r in regs],
+                "parents": [r.parent for r in regs]}
+
+    @classmethod
+    def from_spec(cls, spec: Mapping) -> "RegionTree":
+        tree = cls(spec["root"])
+        for rid, nm, par in zip(spec["rids"], spec["names"], spec["parents"]):
+            tree.add(nm, parent=par, rid=rid)
+        return tree
 
     # -- helpers ----------------------------------------------------------
     @classmethod

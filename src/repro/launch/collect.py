@@ -1,0 +1,81 @@
+"""Pod-wide snapshot collection.
+
+Each host of a pod records only its own shard of the mesh; the paper's
+analysis needs the single view of all m processes.  The 125*n*m-byte
+contract makes that cheap to get: every host serializes its
+``WindowSnapshot`` (``to_bytes``, rank-offset stamped into the header) and
+the blobs are allgathered and merged into one m-rank snapshot.
+
+Two layers, so the merge logic is testable without a pod:
+
+* :func:`merge_blobs` — pure bytes in, merged snapshot out.  ``None``
+  entries are missing hosts and surface in the merged ``gap_mask``.
+* :class:`SnapshotCollector` — ``jax.experimental.multihost_utils.
+  process_allgather``-backed transport over the blobs.  On a single-process
+  runtime it degenerates to a local merge of one shard (same code path).
+
+Importing this module never touches jax device state (dry-run requirement);
+jax loads inside methods only.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.perfdbg.recorder import WindowSnapshot, merge_snapshots
+
+
+def merge_blobs(blobs: Sequence[Optional[bytes]], tree=None,
+                total_ranks: Optional[int] = None) -> WindowSnapshot:
+    """Deserialize per-host snapshot blobs and merge into one pod view.
+    The pure-bytes fallback path: what :class:`SnapshotCollector` does after
+    transport, minus the transport."""
+    shards = [None if b is None else WindowSnapshot.from_bytes(b, tree=tree)
+              for b in blobs]
+    return merge_snapshots(shards, total_ranks=total_ranks)
+
+
+class SnapshotCollector:
+    """Gathers one ``WindowSnapshot`` per host into the pod-wide view.
+
+    ``rank_offset`` places this host's shard in the global rank space;
+    by default host h with an m-rank local shard covers ranks
+    [h*m, (h+1)*m) — the usual contiguous per-host layout.
+    """
+
+    def __init__(self, rank_offset: Optional[int] = None):
+        self._rank_offset = rank_offset
+
+    @property
+    def process_index(self) -> int:
+        import jax
+        return jax.process_index()
+
+    @property
+    def process_count(self) -> int:
+        import jax
+        return jax.process_count()
+
+    def gather(self, snap: WindowSnapshot) -> WindowSnapshot:
+        """Allgather this host's shard with every other host's and merge.
+        Every host returns the same merged m-rank snapshot."""
+        off = self._rank_offset if self._rank_offset is not None \
+            else self.process_index * snap.n_ranks
+        blob = snap.to_bytes(rank_offset=off)
+        if self.process_count == 1:
+            return merge_blobs([blob], tree=snap.tree)
+        return merge_blobs(self._allgather(blob), tree=snap.tree)
+
+    def _allgather(self, blob: bytes) -> list:
+        """Ship variable-length blobs via two fixed-shape allgathers:
+        sizes first, then the max-size-padded payloads."""
+        from jax.experimental.multihost_utils import process_allgather
+        local = np.frombuffer(blob, dtype=np.uint8)
+        sizes = np.asarray(process_allgather(
+            np.asarray([local.size], dtype=np.int64))).reshape(-1)
+        padded = np.zeros(int(sizes.max()), dtype=np.uint8)
+        padded[:local.size] = local
+        stacked = np.asarray(process_allgather(padded))
+        return [stacked[i, :int(sizes[i])].tobytes()
+                for i in range(stacked.shape[0])]

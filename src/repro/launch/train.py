@@ -8,6 +8,11 @@ Features exercised end-to-end (CPU-sized here, mesh-parametric for pods):
     AnalysisSession: every --analyze-every steps the recorder's live window
     is frozen, analyzed, and diffed against the previous window, so a
     bottleneck appearing mid-run is flagged in the window it appears
+  * analysis runs OFF the step loop by default (AsyncAnalysisSession worker
+    thread behind a bounded queue; --analysis-backpressure picks block vs
+    drop-oldest, --sync-analysis opts back into inline analysis)
+  * --pod-gather allgathers every host's window shard into one m-rank
+    snapshot before analysis (single-process here: same path, one shard)
   * --schema selects the attribute set (paper PAPI-era vs tpu roofline)
   * --inject-bottleneck-at N burns CPU in the data region from step N
     (a synthetic mid-run regression for exercising the streaming analyzer)
@@ -40,6 +45,18 @@ def main(argv=None) -> int:
                     help="window length in steps for the streaming analyzer")
     ap.add_argument("--schema", default="paper", choices=("paper", "tpu"),
                     help="attribute schema for the recorder")
+    ap.add_argument("--sync-analysis", action="store_true",
+                    help="analyze windows inline on the step loop instead of "
+                         "on the async worker thread")
+    ap.add_argument("--analysis-queue", type=int, default=4,
+                    help="max windows pending in the async analysis queue")
+    ap.add_argument("--analysis-backpressure", default="block",
+                    choices=("block", "drop-oldest"),
+                    help="queue-full policy: stall the step loop vs evict "
+                         "the oldest pending window")
+    ap.add_argument("--pod-gather", action="store_true",
+                    help="allgather window shards across hosts before "
+                         "analysis (no-op transport on one process)")
     ap.add_argument("--inject-bottleneck-at", type=int, default=0,
                     help="if >0, burn CPU in the data region from this step "
                          "(synthetic mid-run bottleneck)")
@@ -50,8 +67,9 @@ def main(argv=None) -> int:
     import jax
     import jax.numpy as jnp
     from repro.configs import reduced_config, get_config
-    from repro.core import AnalysisSession, RegionTree
+    from repro.core import AnalysisSession, AsyncAnalysisSession, RegionTree
     from repro.data.pipeline import SyntheticTokens
+    from repro.launch.collect import SnapshotCollector
     from repro.launch.mesh import make_host_mesh
     from repro.launch import steps as steps_lib
     from repro.models.model import input_specs
@@ -103,7 +121,28 @@ def main(argv=None) -> int:
         tree.add(nm)
     rec = RegionRecorder(tree, n_ranks=1, schema=args.schema)
     ins = Instrumenter(rec, rank=0)
-    session = AnalysisSession(tree)
+
+    def on_window(entry):
+        verdict = detect(entry.report)
+        line = (f"[window {entry.index}] {entry.title()} internal: "
+                f"{[tree.name(r) for r in entry.report.internal.cccrs]}")
+        if entry.diff.appeared:
+            line += (" | appeared: "
+                     f"{[tree.name(r) for r in entry.diff.appeared]}")
+        if entry.diff.disappeared:
+            line += (" | disappeared: "
+                     f"{[tree.name(r) for r in entry.diff.disappeared]}")
+        print(line + f" | {verdict.render().splitlines()[0]}", flush=True)
+
+    collector = SnapshotCollector() if args.pod_gather else None
+    if args.sync_analysis:
+        session, pipeline = AnalysisSession(tree), None
+    else:
+        session = None
+        pipeline = AsyncAnalysisSession(
+            tree, max_queue=args.analysis_queue,
+            backpressure=args.analysis_backpressure.replace("-", "_"),
+            on_window=on_window)
 
     tokens_per_step = args.batch * args.seq
     flops_per_step = 6 * cfg.active_params() * tokens_per_step
@@ -132,19 +171,14 @@ def main(argv=None) -> int:
 
     def flush_window(last_step: int, win_start: int):
         assert rec.within_paper_budget()
-        entry = session.ingest_recorder(
-            rec, label=f"steps {win_start + 1}-{last_step + 1}")
-        verdict = detect(entry.report)
-        line = (f"[window {entry.index}] steps {win_start + 1}-{last_step + 1} "
-                f"internal: {[tree.name(r) for r in entry.report.internal.cccrs]}")
-        if entry.diff.appeared:
-            line += (" | appeared: "
-                     f"{[tree.name(r) for r in entry.diff.appeared]}")
-        if entry.diff.disappeared:
-            line += (" | disappeared: "
-                     f"{[tree.name(r) for r in entry.diff.disappeared]}")
-        print(line + f" | {verdict.render().splitlines()[0]}", flush=True)
-        return entry
+        label = f"steps {win_start + 1}-{last_step + 1}"
+        snap = rec.reset_window(label)
+        if collector is not None:
+            snap = collector.gather(snap)
+        if pipeline is not None:           # off-critical-path: enqueue only
+            pipeline.submit(snap, label=label)
+        else:
+            on_window(session.ingest_snapshot(snap, label=label))
 
     data.start_prefetch()
     losses = []
@@ -179,7 +213,11 @@ def main(argv=None) -> int:
             flush_window(args.steps - 1, win_start)
 
     data.stop_prefetch()
-    print(session.report().render(tree), flush=True)
+    report = session.report() if pipeline is None else pipeline.close()
+    if pipeline is not None and pipeline.dropped:
+        print(f"[train] analysis dropped {pipeline.dropped} window(s) "
+              f"under backpressure", flush=True)
+    print(report.render(tree), flush=True)
     if saver:
         saver.save(args.steps, {"state": state, "data": data.state_dict()})
         saver.wait()

@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
+import struct
 from typing import Deque, Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -39,6 +41,19 @@ LOCATE_FIELDS = _LOCATE
 RECORD_DTYPE = PAPER_SCHEMA.dtype()
 ATTR_FIELDS = PAPER_SCHEMA.attr_names
 assert RECORD_DTYPE.itemsize == 96
+
+# Snapshot wire format: fixed prefix + JSON header + raw payload.
+#     <4s magic> <u2 version> <u4 header-length> <header json>
+#     <program_wall: n_ranks * f8> <data: schema dtype, row-major>
+# The header is O(1) per snapshot (not per cell), so shipping a window
+# stays within the paper's 125*n*m contract up to a constant.
+WIRE_MAGIC = b"PDWS"
+WIRE_VERSION = 1
+_WIRE_PREFIX = struct.Struct("<4sHI")
+
+
+class WireFormatError(ValueError):
+    """Malformed, incompatible, or wrong-version snapshot bytes."""
 
 
 def _measurements(data: np.ndarray, program_wall: np.ndarray) -> Measurements:
@@ -60,8 +75,14 @@ def _attributes(schema: AttributeSchema, data: np.ndarray) -> Dict[str, np.ndarr
 @dataclasses.dataclass(frozen=True)
 class WindowSnapshot:
     """A frozen collection window: the packed record matrix plus per-rank
-    program wall time.  Cheap to ship (``packed()``) and self-describing
-    enough for ``AnalysisSession`` to consume directly."""
+    program wall time.  Cheap to ship (``to_bytes()``) and self-describing
+    enough for ``AnalysisSession`` to consume directly.
+
+    ``rank_offset`` places a single-host shard inside the pod-wide rank
+    space (host h covering global ranks [offset, offset + m)); it is 0 for
+    a merged or single-host view.  ``gap_mask`` is set by
+    :func:`merge_snapshots` on merged views: True rows are global ranks no
+    shard covered (zero-filled)."""
 
     index: int
     schema: AttributeSchema
@@ -69,6 +90,12 @@ class WindowSnapshot:
     data: np.ndarray             # (m, n) structured array, schema.dtype()
     program_wall: np.ndarray     # (m,)
     label: Optional[str] = None
+    rank_offset: int = 0
+    gap_mask: Optional[np.ndarray] = None   # (m,) bool; None = complete
+
+    @property
+    def n_ranks(self) -> int:
+        return int(self.data.shape[0])
 
     def measurements(self) -> Measurements:
         return _measurements(self.data, self.program_wall)
@@ -83,6 +110,157 @@ class WindowSnapshot:
     def nbytes(self) -> int:
         return self.data.nbytes
 
+    # -- wire format --------------------------------------------------------
+    def to_bytes(self, rank_offset: Optional[int] = None) -> bytes:
+        """Serialize for transport: versioned header (schema name + field
+        spec, window index/label, rank offset, region-tree fingerprint and
+        spec, gap list) followed by the packed payload."""
+        off = self.rank_offset if rank_offset is None else int(rank_offset)
+        header = {
+            "schema": self.schema.name,
+            "schema_fp": self.schema.fingerprint(),
+            "schema_spec": self.schema.to_spec(),
+            "index": int(self.index),
+            "label": self.label,
+            "rank_offset": off,
+            "n_ranks": self.n_ranks,
+            "n_regions": int(self.data.shape[1]),
+            "tree_fp": self.tree.fingerprint(),
+            "tree_spec": self.tree.to_spec(),
+        }
+        if self.gap_mask is not None:
+            # an empty list still means "merged view, fully covered" — the
+            # receiver must get an all-False mask back, not None
+            header["gaps"] = np.flatnonzero(self.gap_mask).tolist()
+        hdr = json.dumps(header, separators=(",", ":")).encode()
+        return b"".join([
+            _WIRE_PREFIX.pack(WIRE_MAGIC, WIRE_VERSION, len(hdr)), hdr,
+            np.ascontiguousarray(self.program_wall, dtype="<f8").tobytes(),
+            np.ascontiguousarray(self.data).tobytes(),
+        ])
+
+    @classmethod
+    def from_bytes(cls, blob: bytes, tree: Optional[RegionTree] = None
+                   ) -> "WindowSnapshot":
+        """Inverse of :meth:`to_bytes`.  The header is self-describing: the
+        region tree and (if unregistered) the schema are rebuilt from their
+        specs.  Pass ``tree`` to reuse a local instance — its fingerprint
+        must match the one in the header."""
+        if len(blob) < _WIRE_PREFIX.size:
+            raise WireFormatError("snapshot blob truncated (no prefix)")
+        magic, version, hlen = _WIRE_PREFIX.unpack_from(blob)
+        if magic != WIRE_MAGIC:
+            raise WireFormatError(f"bad magic {magic!r}")
+        if version != WIRE_VERSION:
+            raise WireFormatError(f"unsupported wire version {version} "
+                                  f"(expected {WIRE_VERSION})")
+        body = _WIRE_PREFIX.size
+        try:
+            header = json.loads(blob[body:body + hlen])
+        except ValueError as e:
+            raise WireFormatError(f"bad snapshot header: {e}") from None
+        try:
+            schema = get_schema(header["schema"])
+        except KeyError:
+            schema = AttributeSchema.from_spec(header["schema"],
+                                               header["schema_spec"])
+        if schema.fingerprint() != header["schema_fp"]:
+            raise WireFormatError(
+                f"schema {header['schema']!r} layout mismatch: local "
+                f"{schema.fingerprint()} != shipped {header['schema_fp']}")
+        if tree is None:
+            tree = RegionTree.from_spec(header["tree_spec"])
+        if tree.fingerprint() != header["tree_fp"]:
+            raise WireFormatError(
+                f"region tree mismatch: local {tree.fingerprint()} != "
+                f"shipped {header['tree_fp']}")
+        m, n = header["n_ranks"], header["n_regions"]
+        dt = schema.dtype()
+        payload = blob[body + hlen:]
+        if len(payload) != 8 * m + dt.itemsize * m * n:
+            raise WireFormatError(
+                f"payload is {len(payload)} bytes, expected "
+                f"{8 * m + dt.itemsize * m * n} for {m} ranks x {n} regions")
+        program_wall = np.frombuffer(payload[:8 * m], dtype="<f8").copy()
+        data = np.frombuffer(payload[8 * m:], dtype=dt).reshape(m, n).copy()
+        gaps = header.get("gaps")
+        gap_mask = None
+        if gaps is not None:
+            gap_mask = np.zeros(m, dtype=bool)
+            gap_mask[gaps] = True
+        return cls(header["index"], schema, tree, data, program_wall,
+                   header["label"], rank_offset=header["rank_offset"],
+                   gap_mask=gap_mask)
+
+
+def merge_snapshots(shards: Sequence[Optional[WindowSnapshot]],
+                    total_ranks: Optional[int] = None) -> WindowSnapshot:
+    """Concatenate per-host window shards into one pod-wide m-rank snapshot.
+
+    Shards must agree on schema layout, region tree, and window index.  Rank
+    placement has two modes:
+
+    * **declared** — any shard carries a nonzero ``rank_offset``: each shard
+      lands at its offset; overlaps raise.
+    * **cumulative** — all offsets are 0: shards stack in list order.
+
+    ``None`` entries are missing hosts.  Their ranks (cumulative mode infers
+    the hole size only when all present shards are the same size) plus any
+    ranks no shard covers up to ``total_ranks`` are zero-filled and flagged
+    in the merged snapshot's ``gap_mask``.  The merged ``rank`` id column is
+    rewritten to global rank ids."""
+    present = [s for s in shards if s is not None]
+    if not present:
+        raise ValueError("merge_snapshots needs at least one present shard")
+    ref = present[0]
+    for s in present[1:]:
+        if s.schema.fingerprint() != ref.schema.fingerprint():
+            raise WireFormatError(
+                f"shard schema {s.schema.name!r} incompatible with "
+                f"{ref.schema.name!r}")
+        if s.tree.fingerprint() != ref.tree.fingerprint():
+            raise WireFormatError("shard region trees differ")
+        if s.index != ref.index:
+            raise WireFormatError(
+                f"shard window indices differ: {s.index} != {ref.index}")
+    declared = any(s.rank_offset != 0 for s in present)
+    placed: list = []          # (offset, shard)
+    if declared:
+        placed = [(s.rank_offset, s) for s in present]
+    else:
+        sizes = {s.n_ranks for s in present}
+        if len(present) != len(shards) and len(sizes) != 1:
+            raise ValueError(
+                "cannot infer the rank span of a missing shard: shards "
+                "carry no rank_offset and present shards differ in size")
+        hole = next(iter(sizes))
+        off = 0
+        for s in shards:
+            if s is not None:
+                placed.append((off, s))
+            off += hole if s is None else s.n_ranks
+    end = max(off + s.n_ranks for off, s in placed)
+    if not declared:
+        end = max(end, off)   # a trailing missing host still widens the pod
+    m = end if total_ranks is None else int(total_ranks)
+    if m < end:
+        raise ValueError(f"total_ranks={m} smaller than shard coverage {end}")
+    n = ref.data.shape[1]
+    data = np.zeros((m, n), dtype=ref.data.dtype)
+    data["region_id"] = ref.data["region_id"][:1]   # well-formed gap rows
+    program_wall = np.zeros(m)
+    gap = np.ones(m, dtype=bool)
+    label = next((s.label for s in present if s.label is not None), None)
+    for off, s in sorted(placed, key=lambda p: p[0]):
+        if not gap[off:off + s.n_ranks].all():
+            raise ValueError(f"shard rank ranges overlap at offset {off}")
+        data[off:off + s.n_ranks] = s.data
+        program_wall[off:off + s.n_ranks] = s.program_wall
+        gap[off:off + s.n_ranks] = False
+    data["rank"] = np.arange(m, dtype=data.dtype["rank"])[:, None]
+    return WindowSnapshot(ref.index, ref.schema, ref.tree, data,
+                          program_wall, label, rank_offset=0, gap_mask=gap)
+
 
 class RegionRecorder:
     """Accumulates per-(rank, region) metrics for the live window and exports
@@ -91,9 +269,10 @@ class RegionRecorder:
 
     def __init__(self, tree: RegionTree, n_ranks: int,
                  schema: Union[str, AttributeSchema] = "paper",
-                 max_windows: int = 16):
+                 max_windows: int = 16, rank_offset: int = 0):
         self.tree = tree
         self.n_ranks = n_ranks
+        self.rank_offset = rank_offset
         self.schema = get_schema(schema) if isinstance(schema, str) else schema
         self.dtype = self.schema.dtype()
         self._cols: Dict[int, int] = {rid: i for i, rid in enumerate(tree.ids())}
@@ -157,12 +336,12 @@ class RegionRecorder:
         """Freeze the live window (no reset)."""
         return WindowSnapshot(self.window_index, self.schema, self.tree,
                               self._data.copy(), self.program_wall.copy(),
-                              label)
+                              label, rank_offset=self.rank_offset)
 
-    def reset_window(self) -> WindowSnapshot:
+    def reset_window(self, label: Optional[str] = None) -> WindowSnapshot:
         """Push the live window onto the ring and start a fresh one.
         Returns the frozen window."""
-        snap = self.snapshot()
+        snap = self.snapshot(label)
         self._windows.append(snap)
         self.window_index += 1
         self._init_window()

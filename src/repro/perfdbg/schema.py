@@ -22,6 +22,7 @@ collection stays within 125*n*m bytes for n regions x m processes.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -79,6 +80,10 @@ class AttributeSchema:
             raise ValueError(f"duplicate attribute field in schema {self.name!r}")
         if set(names) & set(LOCATE_FIELDS):
             raise ValueError("attribute fields may not shadow locate fields")
+        exports = [f.export_name for f in self.fields]
+        if len(set(exports)) != len(exports):
+            raise ValueError(f"duplicate export name in schema {self.name!r}: "
+                             f"a column would be silently overwritten")
 
     # -- layout -------------------------------------------------------------
     def dtype(self) -> np.dtype:
@@ -98,6 +103,26 @@ class AttributeSchema:
 
     def bytes_per_cell(self) -> int:
         return self.dtype().itemsize
+
+    def fingerprint(self) -> str:
+        """Stable digest of the schema's identity *and* packed layout.  Two
+        schemas with the same name but different fields/reductions get
+        different fingerprints, so snapshot transport can reject a shard
+        packed under a stale schema definition."""
+        spec = [self.name, str(self.dtype().descr)]
+        spec += [(f.name, f.reduction, f.source, f.export_name)
+                 for f in self.fields]
+        return hashlib.sha256(repr(spec).encode()).hexdigest()[:16]
+
+    def to_spec(self) -> list:
+        """JSON-serializable field spec (for self-describing wire headers)."""
+        return [[f.name, f.reduction, f.source, f.export]
+                for f in self.fields]
+
+    @classmethod
+    def from_spec(cls, name: str, spec) -> "AttributeSchema":
+        return cls(name, tuple(AttributeField(n, red, src, exp)
+                               for n, red, src, exp in spec))
 
     def within_budget(self) -> bool:
         """The paper's headline contract, per cell: <= 125 bytes."""

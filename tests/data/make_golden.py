@@ -1,0 +1,62 @@
+"""Regenerate the golden-report fixture pair:
+
+    PYTHONPATH=src python tests/data/make_golden.py
+
+Writes ``golden_windows.bin`` (a stream of length-prefixed serialized
+``WindowSnapshot`` blobs — 4 windows x 4 ranks x 3 regions with a
+bottleneck that appears in window 1 and migrates in window 3) and
+``golden_report.txt`` (the exact ``SessionReport.render()`` of that
+stream).  ``test_golden_report.py`` asserts the rendered report of the
+deserialized stream matches the text byte for byte, so report semantics
+can't silently drift.  Regenerate ONLY on an intentional format change,
+and review the diff of the .txt like source code.
+"""
+import pathlib
+import struct
+
+from repro.core import AnalysisSession, RegionTree
+from repro.perfdbg import RegionRecorder
+
+HERE = pathlib.Path(__file__).parent
+
+# window -> {rid: cpu factor}: r2 appears hot in w1, persists in w2,
+# migrates to r3 in w3; rank 3 straggles mildly throughout w2.
+HOT = {0: {}, 1: {2: 8.0}, 2: {2: 8.0}, 3: {3: 8.0}}
+
+
+def build_stream():
+    tree = RegionTree("golden")
+    for i in (1, 2, 3):
+        tree.add(f"r{i}", rid=i)
+    rec = RegionRecorder(tree, 4, max_windows=8)
+    for w, hot in sorted(HOT.items()):
+        for r in range(4):
+            slow = 2.0 if (w == 2 and r == 3) else 1.0
+            for rid in (1, 2, 3):
+                c = slow * hot.get(rid, 1.0)
+                rec.add(r, rid, cpu_time=c, wall_time=c, cycles=c * 2e9,
+                        instructions=1e9, l1_miss_rate=0.02 * rid,
+                        l2_miss_rate=0.01, disk_io=64.0 * (rid == 1))
+            rec.add_program_wall(r, slow * 3.0)
+        rec.reset_window(f"phase-{w}")
+    return tree, rec.windows()
+
+
+def main():
+    tree, snaps = build_stream()
+    with open(HERE / "golden_windows.bin", "wb") as f:
+        for snap in snaps:
+            blob = snap.to_bytes()
+            f.write(struct.pack("<I", len(blob)))
+            f.write(blob)
+    session = AnalysisSession(tree)
+    for snap in snaps:
+        session.ingest_snapshot(snap)
+    text = session.report().render(tree) + "\n"
+    (HERE / "golden_report.txt").write_text(text)
+    print(text)
+    print(f"wrote {len(snaps)} windows to {HERE / 'golden_windows.bin'}")
+
+
+if __name__ == "__main__":
+    main()

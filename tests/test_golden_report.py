@@ -1,0 +1,68 @@
+"""Golden-report regression: a checked-in serialized multi-window snapshot
+stream must render to the checked-in report text byte for byte — bottleneck
+timeline, appear/disappear/migrate markers, severity formatting and all.
+Regenerate with ``PYTHONPATH=src python tests/data/make_golden.py`` only on
+an intentional semantics change, and review the .txt diff like code."""
+import pathlib
+import struct
+
+import pytest
+
+from repro.core import AnalysisSession, AsyncAnalysisSession
+from repro.perfdbg import WindowSnapshot
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+
+def load_stream():
+    raw = (DATA / "golden_windows.bin").read_bytes()
+    snaps, off = [], 0
+    while off < len(raw):
+        (ln,) = struct.unpack_from("<I", raw, off)
+        off += 4
+        snaps.append(WindowSnapshot.from_bytes(raw[off:off + ln]))
+        off += ln
+    return snaps
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return load_stream()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return (DATA / "golden_report.txt").read_text()
+
+
+def test_fixture_shape(stream):
+    assert len(stream) == 4
+    assert [s.label for s in stream] == [f"phase-{i}" for i in range(4)]
+    assert stream[0].n_ranks == 4 and stream[0].data.shape[1] == 3
+    # all windows share one tree and schema lineage
+    fps = {s.tree.fingerprint() for s in stream}
+    assert len(fps) == 1
+    assert {s.schema.name for s in stream} == {"paper"}
+
+
+def test_report_matches_golden(stream, golden):
+    session = AnalysisSession(stream[0].tree)
+    for snap in stream:
+        session.ingest_snapshot(snap)
+    assert session.report().render(stream[0].tree) + "\n" == golden
+
+
+def test_async_pipeline_matches_golden(stream, golden):
+    """The async path renders the identical report on the same stream."""
+    with AsyncAnalysisSession(stream[0].tree) as pipe:
+        for snap in stream:
+            pipe.submit(snap)
+        report = pipe.drain()
+    assert report.render(stream[0].tree) + "\n" == golden
+
+
+def test_golden_covers_the_interesting_diffs(golden):
+    """Guard the fixture itself: if regeneration waters it down, fail."""
+    for marker in ("appeared:", "disappeared:", "migrated:", "external:",
+                   "timeline:"):
+        assert marker in golden, f"golden fixture lost its {marker} case"

@@ -61,6 +61,100 @@ class TestRecorder:
         assert rep.external is not None and rep.internal is not None
 
 
+class TestDurationWeightedRates:
+    """WMEAN fields on multi-call regions: the recorded rate is the
+    duration-weighted mean of the calls, however unequal their durations."""
+
+    def test_unequal_durations_weight_by_wall_time(self):
+        rec = RegionRecorder(small_tree(), 1)
+        # three calls: 6s at 10% misses, 3s at 40%, 1s at 90%
+        rec.add(0, 1, wall_time=6.0, l1_miss_rate=0.10)
+        rec.add(0, 1, wall_time=3.0, l1_miss_rate=0.40)
+        rec.add(0, 1, wall_time=1.0, l1_miss_rate=0.90)
+        want = (0.10 * 6 + 0.40 * 3 + 0.90 * 1) / 10
+        assert rec.attributes()["l1_miss_rate"][0, 0] == pytest.approx(want)
+        # a long dominant call pins the mean near its own rate
+        rec.add(0, 2, wall_time=99.0, l1_miss_rate=0.2)
+        rec.add(0, 2, wall_time=1.0, l1_miss_rate=1.0)
+        assert rec.attributes()["l1_miss_rate"][0, 1] == pytest.approx(0.208)
+
+    def test_cpu_time_weight_fallback_then_unit(self):
+        rec = RegionRecorder(small_tree(), 1)
+        # no wall time recorded -> CPU time is the weight
+        rec.add(0, 1, cpu_time=3.0, l2_miss_rate=0.1)
+        rec.add(0, 1, cpu_time=1.0, l2_miss_rate=0.5)
+        assert rec.attributes()["l2_miss_rate"][0, 0] == pytest.approx(0.2)
+        # neither clock recorded -> every call weighs 1 (plain mean)
+        rec.add(0, 2, l2_miss_rate=0.2)
+        rec.add(0, 2, l2_miss_rate=0.6)
+        assert rec.attributes()["l2_miss_rate"][0, 1] == pytest.approx(0.4)
+
+    def test_constant_rate_is_exact_across_many_calls(self):
+        rec = RegionRecorder(small_tree(), 1)
+        for i in range(50):
+            rec.add(0, 1, wall_time=0.1 * (1 + i % 7), l2_miss_rate=0.25)
+        assert rec.attributes()["l2_miss_rate"][0, 0] == 0.25
+
+    def test_weighted_mean_survives_wire_roundtrip(self):
+        from repro.perfdbg import WindowSnapshot
+        rec = RegionRecorder(small_tree(), 1)
+        rec.add(0, 1, wall_time=9.0, l2_miss_rate=0.10)
+        rec.add(0, 1, wall_time=1.0, l2_miss_rate=0.50)
+        back = WindowSnapshot.from_bytes(rec.snapshot().to_bytes())
+        assert back.attributes()["l2_miss_rate"][0, 0] == pytest.approx(0.14)
+
+
+class TestCpuClockFallback:
+    """CPU_CLOCK must fall back to perf_counter when the kernel's
+    CLOCK_PROCESS_CPUTIME_ID is pinned or coarsely quantized (gVisor-style
+    sandboxes tick it at ~10ms, collapsing short regions to zero)."""
+
+    @pytest.fixture(autouse=True)
+    def reset_clock_cache(self):
+        from repro.perfdbg import instrument
+        instrument._cpu_clock = None
+        yield
+        instrument._cpu_clock = None
+
+    def test_quantized_clock_rejected(self, monkeypatch):
+        from repro.perfdbg import instrument
+        monkeypatch.setattr(time, "process_time", lambda: 0.0)
+        assert not instrument._process_time_works(probe_s=0.005)
+        assert instrument._cpu_clock is None
+        instrument.CPU_CLOCK()
+        assert instrument._cpu_clock is time.perf_counter
+
+    def test_coarse_ticks_rejected(self, monkeypatch):
+        """A clock that only advances in 10ms steps yields too few distinct
+        values over the probe window."""
+        from repro.perfdbg import instrument
+        monkeypatch.setattr(
+            time, "process_time",
+            lambda: np.floor(time.perf_counter() * 100) / 100)
+        assert not instrument._process_time_works(probe_s=0.005)
+
+    def test_fine_clock_accepted(self, monkeypatch):
+        from repro.perfdbg import instrument
+        monkeypatch.setattr(time, "process_time", time.perf_counter)
+        assert instrument._process_time_works(probe_s=0.005)
+        instrument.CPU_CLOCK()
+        assert instrument._cpu_clock is time.process_time
+
+    def test_fallback_still_times_regions(self, monkeypatch):
+        from repro.perfdbg import instrument
+        monkeypatch.setattr(time, "process_time", lambda: 0.0)
+        rec = RegionRecorder(small_tree(2), 1)
+        ins = Instrumenter(rec, 0)
+        with ins.region("r1", nominal_cpi=1.0):
+            t_end = time.perf_counter() + 0.01
+            while time.perf_counter() < t_end:
+                pass
+        m = rec.measurements()
+        # perf_counter fallback: cpu_time tracks the busy wait instead of 0
+        assert m.cpu_time[0, 0] >= 0.009
+        assert m.instructions[0, 0] > 0
+
+
 class TestInstrumenter:
     def test_region_timing(self):
         t = small_tree(2)

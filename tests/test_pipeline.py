@@ -1,0 +1,223 @@
+"""AsyncAnalysisSession: equivalence with the synchronous session, the
+drain()/close() contract, backpressure policies, and a producer-faster-
+than-worker stress run (no deadlock, bounded queue, exact accounting)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (AnalysisSession, AsyncAnalysisSession, PipelineClosed,
+                        RegionTree)
+from repro.core.pipeline import BLOCK, DROP_OLDEST
+from repro.perfdbg import RegionRecorder
+
+
+def small_tree(n=3):
+    t = RegionTree()
+    for i in range(1, n + 1):
+        t.add(f"r{i}", rid=i)
+    return t
+
+
+def window_stream(tree, n_windows, n_ranks=4, hot_at=None):
+    """Deterministic snapshot stream; ``hot_at`` = {window: {rid: factor}}."""
+    hot_at = hot_at or {}
+    rec = RegionRecorder(tree, n_ranks, max_windows=max(n_windows, 1))
+    for w in range(n_windows):
+        hot = hot_at.get(w, {})
+        for r in range(n_ranks):
+            for rid in tree.ids():
+                c = 1.0 * hot.get(rid, 1.0)
+                rec.add(r, rid, cpu_time=c, wall_time=c, cycles=c * 2e9,
+                        instructions=1e9)
+            rec.add_program_wall(r, float(len(tree.ids())))
+        rec.reset_window(f"w{w}")
+    return rec.windows()
+
+
+class SlowSession(AnalysisSession):
+    """An AnalysisSession whose ingest is artificially slow — lets a test
+    producer outrun the worker deterministically."""
+
+    def __init__(self, tree, delay=0.01, **kw):
+        super().__init__(tree, **kw)
+        self.delay = delay
+
+    def ingest_snapshot(self, snap, label=None):
+        time.sleep(self.delay)
+        return super().ingest_snapshot(snap, label=label)
+
+
+class TestEquivalence:
+    def test_async_report_byte_identical_to_sync(self):
+        """The acceptance contract: same window stream, same rendered
+        report, byte for byte."""
+        tree = small_tree()
+        snaps = window_stream(tree, 6, hot_at={2: {2: 8.0}, 3: {2: 8.0},
+                                               4: {1: 8.0}})
+        sync = AnalysisSession(tree)
+        for s in snaps:
+            sync.ingest_snapshot(s)
+        with AsyncAnalysisSession(tree) as pipe:
+            for s in snaps:
+                pipe.submit(s)
+            async_report = pipe.drain()
+        assert async_report.render(tree) == sync.report().render(tree)
+        assert async_report.render() == sync.report().render()
+
+    def test_on_window_sees_every_entry_in_order(self):
+        tree = small_tree()
+        seen = []
+        pipe = AsyncAnalysisSession(tree, on_window=lambda e: seen.append(e.index))
+        for s in window_stream(tree, 5):
+            pipe.submit(s)
+        pipe.close()
+        assert seen == [0, 1, 2, 3, 4]
+
+
+class TestStress:
+    def test_fast_producer_block_policy(self):
+        """Producer floods 40 windows at a worker throttled to ~10ms each:
+        never deadlocks, the queue never exceeds its bound, and after
+        drain() every window has been analyzed exactly once."""
+        tree = small_tree()
+        snaps = window_stream(tree, 1) * 40
+        pipe = AsyncAnalysisSession(
+            tree, max_queue=3, backpressure=BLOCK,
+            session=SlowSession(tree, delay=0.005))
+        max_pending = 0
+        for s in snaps:
+            pipe.submit(s)
+            max_pending = max(max_pending, pipe.pending)
+        report = pipe.close(timeout=30.0)
+        assert max_pending <= 3
+        assert pipe.dropped == 0
+        assert pipe.analyzed == 40
+        assert len(report.windows) == 40
+        # indices assigned by the session, in submission order
+        assert [w.index for w in report.windows] == list(range(40))
+
+    def test_fast_producer_drop_oldest_policy(self):
+        """Same flood under drop_oldest: the step loop never blocks, memory
+        stays bounded, and accounting is exact (analyzed + dropped ==
+        submitted)."""
+        tree = small_tree()
+        snaps = window_stream(tree, 1) * 60
+        pipe = AsyncAnalysisSession(
+            tree, max_queue=2, backpressure=DROP_OLDEST,
+            session=SlowSession(tree, delay=0.01))
+        t0 = time.perf_counter()
+        for s in snaps:
+            pipe.submit(s)
+            assert pipe.pending <= 2
+        submit_wall = time.perf_counter() - t0
+        report = pipe.close(timeout=30.0)
+        assert submit_wall < 60 * 0.01  # never waited on the worker
+        assert pipe.dropped > 0
+        assert pipe.analyzed + pipe.dropped == pipe.submitted == 60
+        assert len(report.windows) == pipe.analyzed
+
+    def test_multithreaded_producers_no_deadlock(self):
+        tree = small_tree()
+        snap = window_stream(tree, 1)[0]
+        pipe = AsyncAnalysisSession(tree, max_queue=2,
+                                    session=SlowSession(tree, delay=0.002))
+
+        def produce():
+            for _ in range(10):
+                pipe.submit(snap)
+
+        threads = [threading.Thread(target=produce) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30.0)
+        assert not any(t.is_alive() for t in threads)
+        report = pipe.close(timeout=30.0)
+        assert len(report.windows) == 40
+
+
+class TestContract:
+    def test_drain_then_more_submits(self):
+        tree = small_tree()
+        pipe = AsyncAnalysisSession(tree)
+        s0, s1 = window_stream(tree, 2)
+        pipe.submit(s0)
+        assert len(pipe.drain().windows) == 1
+        pipe.submit(s1)
+        assert len(pipe.close().windows) == 2
+
+    def test_close_is_idempotent_and_final(self):
+        tree = small_tree()
+        pipe = AsyncAnalysisSession(tree)
+        pipe.submit(window_stream(tree, 1)[0])
+        r1 = pipe.close()
+        r2 = pipe.close()
+        assert r1.render() == r2.render()
+        with pytest.raises(PipelineClosed):
+            pipe.submit(window_stream(tree, 1)[0])
+
+    def test_close_flushes_backlog(self):
+        """close() analyzes everything already queued before stopping."""
+        tree = small_tree()
+        pipe = AsyncAnalysisSession(tree, max_queue=8,
+                                    session=SlowSession(tree, delay=0.005))
+        for s in window_stream(tree, 6):
+            pipe.submit(s)
+        assert len(pipe.close(timeout=30.0).windows) == 6
+
+    def test_worker_error_reraised_on_drain(self):
+        tree = small_tree()
+
+        class Boom(AnalysisSession):
+            def ingest_snapshot(self, snap, label=None):
+                raise RuntimeError("kaboom")
+
+        pipe = AsyncAnalysisSession(tree, session=Boom(tree))
+        pipe.submit(window_stream(tree, 1)[0])
+        with pytest.raises(RuntimeError, match="analysis worker failed"):
+            pipe.drain(timeout=10.0)
+        # the failed window is not counted as analyzed
+        assert pipe.analyzed == 0 and pipe.submitted == 1
+
+    def test_callback_error_reraised(self):
+        tree = small_tree()
+
+        def bad_callback(entry):
+            raise ValueError("bad hook")
+
+        pipe = AsyncAnalysisSession(tree, on_window=bad_callback)
+        pipe.submit(window_stream(tree, 1)[0])
+        with pytest.raises(RuntimeError, match="analysis worker failed"):
+            pipe.close(timeout=10.0)
+
+    def test_drain_timeout(self):
+        tree = small_tree()
+        pipe = AsyncAnalysisSession(tree, session=SlowSession(tree, delay=0.5))
+        pipe.submit(window_stream(tree, 1)[0])
+        with pytest.raises(TimeoutError):
+            pipe.drain(timeout=0.05)
+        pipe.close(timeout=30.0)
+
+    def test_bad_construction_args(self):
+        with pytest.raises(ValueError, match="backpressure"):
+            AsyncAnalysisSession(small_tree(), backpressure="spill")
+        with pytest.raises(ValueError, match="max_queue"):
+            AsyncAnalysisSession(small_tree(), max_queue=0)
+
+    def test_submit_recorder_matches_ingest_recorder(self):
+        tree = small_tree()
+        rec_a = RegionRecorder(tree, 2)
+        rec_b = RegionRecorder(tree, 2)
+        for rec in (rec_a, rec_b):
+            rec.add(0, 1, cpu_time=2.0, wall_time=2.0)
+            rec.add(1, 1, cpu_time=1.0, wall_time=1.0)
+        sync = AnalysisSession(tree)
+        sync.ingest_recorder(rec_a, label="w")
+        with AsyncAnalysisSession(tree) as pipe:
+            pipe.submit_recorder(rec_b, label="w")
+            report = pipe.drain()
+        assert report.render(tree) == sync.report().render(tree)
+        # both recorders were reset by the freeze
+        assert rec_a.window_index == rec_b.window_index == 1

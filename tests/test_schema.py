@@ -87,6 +87,9 @@ class TestDtypeGeneration:
             AttributeSchema("bad", (AttributeField("cpu_time"),))
         with pytest.raises(ValueError, match="duplicate"):
             AttributeSchema("dup", (AttributeField("x"), AttributeField("x")))
+        with pytest.raises(ValueError, match="duplicate export"):
+            AttributeSchema("dup-exp", (AttributeField("x", export="m"),
+                                        AttributeField("y", export="m")))
         with pytest.raises(ValueError, match="reduction"):
             AttributeField("x", reduction="max")
         with pytest.raises(ValueError, match="locate field"):

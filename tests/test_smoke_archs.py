@@ -10,6 +10,8 @@ import pytest
 
 from repro.configs import (SHAPES, all_cells, get_config, list_archs,
                            reduced_config)
+
+pytestmark = pytest.mark.slow
 from repro.models import init_params, loss_fn
 from repro.models.layers import apply_logits
 from repro.models.model import decode_step, forward, prefill

@@ -1,0 +1,283 @@
+"""Snapshot wire format + pod merge: property and unit tests.
+
+Property layer (hypothesis, or the fixed-seed `_hypo` fallback): the
+pack -> bytes -> unpack roundtrip is exact — bit-for-bit, including NaN and
++-inf cells — for both built-in schemas across random region counts and
+rank counts, and merging k random shards preserves every cell and the
+global rank ordering.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypo import given, settings, st
+
+from repro.core import AnalysisSession, RegionTree
+from repro.perfdbg import (RegionRecorder, WindowSnapshot, WireFormatError,
+                           get_schema, merge_snapshots)
+from repro.perfdbg.recorder import WIRE_MAGIC, WIRE_VERSION
+
+SPECIALS = np.array([np.nan, np.inf, -np.inf, 0.0, -0.0, 1e-300, 1e300])
+
+
+def make_tree(n_regions, nested=False):
+    t = RegionTree("prog")
+    for i in range(1, n_regions + 1):
+        parent = (i - 1) if (nested and i > 1) else 0
+        t.add(f"r{i}", parent=parent, rid=i)
+    return t
+
+
+def random_snapshot(schema_name, n_regions, n_ranks, seed, index=0,
+                    label=None, rank_offset=0):
+    """A snapshot with fully random float fields, specials injected."""
+    schema = get_schema(schema_name)
+    rng = np.random.default_rng(seed)
+    tree = make_tree(n_regions, nested=bool(seed % 2))
+    data = np.zeros((n_ranks, n_regions), dtype=schema.dtype())
+    float_fields = [f for f in data.dtype.names
+                    if data.dtype[f].kind == "f"]
+    for f in float_fields:
+        vals = rng.uniform(-1e6, 1e6, size=(n_ranks, n_regions))
+        # sprinkle NaN/inf/denormal-ish specials into ~1/4 of the cells
+        mask = rng.random((n_ranks, n_regions)) < 0.25
+        vals[mask] = rng.choice(SPECIALS, size=int(mask.sum()))
+        data[f] = vals
+    data["region_id"] = np.asarray(tree.ids())[None, :]
+    data["rank"] = np.arange(n_ranks)[:, None]
+    pw = rng.uniform(0, 1e3, size=n_ranks)
+    return WindowSnapshot(index, schema, tree, data, pw, label,
+                          rank_offset=rank_offset)
+
+
+def assert_snapshots_equal(a, b):
+    for f in a.data.dtype.names:
+        if a.data.dtype[f].kind == "V":
+            continue  # padding
+        np.testing.assert_array_equal(a.data[f], b.data[f], err_msg=f)
+    np.testing.assert_array_equal(a.program_wall, b.program_wall)
+    assert a.index == b.index and a.label == b.label
+    assert a.rank_offset == b.rank_offset
+
+
+class TestRoundtripProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(st.sampled_from(["paper", "tpu"]), st.integers(1, 9),
+           st.integers(1, 7), st.integers(0, 2**31 - 1))
+    def test_roundtrip_exact(self, schema, n_regions, n_ranks, seed):
+        snap = random_snapshot(schema, n_regions, n_ranks, seed,
+                               index=seed % 11, label=f"w{seed % 5}",
+                               rank_offset=seed % 3)
+        back = WindowSnapshot.from_bytes(snap.to_bytes())
+        assert_snapshots_equal(snap, back)
+        assert back.schema.fingerprint() == snap.schema.fingerprint()
+        assert back.tree.fingerprint() == snap.tree.fingerprint()
+        assert back.tree.to_spec() == snap.tree.to_spec()
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.sampled_from(["paper", "tpu"]), st.integers(2, 5),
+           st.integers(1, 4), st.integers(0, 2**31 - 1), st.integers(2, 5))
+    def test_merge_preserves_cells_and_rank_order(self, schema, n_regions,
+                                                  per_host, seed, k):
+        shards = [random_snapshot(schema, n_regions, per_host,
+                                  seed, index=3) for h in range(k)]
+        # distinct payloads per host, same tree/schema (same seed for those)
+        for h, s in enumerate(shards):
+            s.data["cpu_time"] += h * 1e7
+        merged = merge_snapshots(shards)
+        assert merged.n_ranks == k * per_host
+        assert not merged.gap_mask.any()
+        for h, s in enumerate(shards):
+            lo = h * per_host
+            for f in s.data.dtype.names:
+                if s.data.dtype[f].kind == "V" or f == "rank":
+                    continue
+                np.testing.assert_array_equal(
+                    merged.data[f][lo:lo + per_host], s.data[f], err_msg=f)
+            np.testing.assert_array_equal(
+                merged.program_wall[lo:lo + per_host], s.program_wall)
+        # rank ids rewritten to the global space, in order
+        np.testing.assert_array_equal(
+            merged.data["rank"][:, 0], np.arange(k * per_host))
+
+    def test_gapless_merged_view_keeps_mask_on_the_wire(self):
+        """A fully-covered merged view must round-trip with an all-False
+        gap_mask array, not degrade to None (readers do `gap_mask.any()`)."""
+        shards = [random_snapshot("paper", 2, 2, seed=7) for _ in range(2)]
+        merged = merge_snapshots(shards)
+        assert not merged.gap_mask.any()
+        back = WindowSnapshot.from_bytes(merged.to_bytes())
+        assert back.gap_mask is not None and not back.gap_mask.any()
+        # an unmerged single-host shard still ships with no mask at all
+        plain = WindowSnapshot.from_bytes(shards[0].to_bytes())
+        assert plain.gap_mask is None
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 4), st.integers(2, 4), st.integers(0, 2**31 - 1))
+    def test_merged_snapshot_itself_roundtrips(self, per_host, k, seed):
+        shards = [random_snapshot("paper", 3, per_host, seed) for _ in range(k)]
+        shards[k // 2] = None  # one missing host -> gap mask on the wire
+        merged = merge_snapshots(shards)
+        back = WindowSnapshot.from_bytes(merged.to_bytes())
+        assert_snapshots_equal(merged, back)
+        np.testing.assert_array_equal(back.gap_mask, merged.gap_mask)
+
+
+class TestMergeSemantics:
+    def fill(self, rec, rank, scale=1.0):
+        for rid in rec.tree.ids():
+            rec.add(rank, rid, cpu_time=scale * rid, wall_time=scale * rid,
+                    cycles=scale * rid * 2e9, instructions=1e9)
+        rec.add_program_wall(rank, scale * 6.0)
+
+    def test_merged_shards_match_direct_k_rank_recorder(self):
+        """The acceptance contract: k single-host shards, merged, analyze
+        identically to one k-rank recorder fed the same observations."""
+        tree = make_tree(3)
+        k = 5
+        big = RegionRecorder(tree, k)
+        shards = []
+        for r in range(k):
+            one = RegionRecorder(tree, 1)
+            scale = 4.0 if r == k - 1 else 1.0  # rank k-1 straggles
+            self.fill(big, r, scale)
+            self.fill(one, 0, scale)
+            shards.append(one.snapshot())
+        merged = merge_snapshots(shards)
+        via_merge = AnalysisSession(tree).ingest_snapshot(merged).report
+        direct = AnalysisSession(tree).ingest_snapshot(big.snapshot()).report
+        assert via_merge.internal.cccrs == direct.internal.cccrs
+        assert via_merge.external.cccrs == direct.external.cccrs
+        assert via_merge.external.severity == direct.external.severity
+        assert (via_merge.external.clustering.labels ==
+                direct.external.clustering.labels)
+
+    def test_declared_offsets_place_shards(self):
+        tree = make_tree(2)
+        a = RegionRecorder(tree, 2, rank_offset=4)
+        b = RegionRecorder(tree, 4, rank_offset=0)
+        self.fill(a, 0), self.fill(a, 1, 2.0)
+        for r in range(4):
+            self.fill(b, r, 3.0)
+        merged = merge_snapshots([a.snapshot(), b.snapshot()])
+        assert merged.n_ranks == 6
+        assert merged.program_wall[4] == 6.0 and merged.program_wall[5] == 12.0
+        assert merged.program_wall[0] == 18.0
+        assert not merged.gap_mask.any()
+
+    def test_missing_host_yields_gap_mask(self):
+        tree = make_tree(2)
+        recs = [RegionRecorder(tree, 2) for _ in range(3)]
+        for rec in recs:
+            self.fill(rec, 0), self.fill(rec, 1)
+        merged = merge_snapshots([recs[0].snapshot(), None,
+                                  recs[2].snapshot()])
+        assert merged.n_ranks == 6
+        np.testing.assert_array_equal(
+            merged.gap_mask, [False, False, True, True, False, False])
+        assert (merged.data["cpu_time"][2:4] == 0).all()
+        # gap rows still carry well-formed region ids
+        np.testing.assert_array_equal(merged.data["region_id"][2],
+                                      merged.data["region_id"][0])
+
+    def test_missing_host_unknowable_span_raises(self):
+        tree = make_tree(2)
+        a, b = RegionRecorder(tree, 1), RegionRecorder(tree, 3)
+        with pytest.raises(ValueError, match="rank span"):
+            merge_snapshots([a.snapshot(), None, b.snapshot()])
+
+    def test_total_ranks_extends_coverage(self):
+        tree = make_tree(2)
+        rec = RegionRecorder(tree, 2)
+        merged = merge_snapshots([rec.snapshot()], total_ranks=5)
+        assert merged.n_ranks == 5
+        assert merged.gap_mask.tolist() == [False, False, True, True, True]
+        with pytest.raises(ValueError, match="smaller than"):
+            merge_snapshots([rec.snapshot()], total_ranks=1)
+
+    def test_overlapping_offsets_raise(self):
+        tree = make_tree(2)
+        a = RegionRecorder(tree, 2, rank_offset=0)
+        b = RegionRecorder(tree, 2, rank_offset=1)
+        with pytest.raises(ValueError, match="overlap"):
+            merge_snapshots([a.snapshot(), b.snapshot()])
+
+    def test_incompatible_shards_rejected(self):
+        t1, t2 = make_tree(2), make_tree(3)
+        with pytest.raises(WireFormatError, match="trees differ"):
+            merge_snapshots([RegionRecorder(t1, 1).snapshot(),
+                             RegionRecorder(t2, 1).snapshot()])
+        with pytest.raises(WireFormatError, match="incompatible"):
+            merge_snapshots([RegionRecorder(t1, 1, schema="paper").snapshot(),
+                             RegionRecorder(t1, 1, schema="tpu").snapshot()])
+        ra, rb = RegionRecorder(t1, 1), RegionRecorder(t1, 1)
+        rb.reset_window()
+        with pytest.raises(WireFormatError, match="indices differ"):
+            merge_snapshots([ra.snapshot(), rb.snapshot()])
+
+    def test_merge_blobs_pure_bytes_path(self):
+        from repro.launch.collect import merge_blobs
+        tree = make_tree(2)
+        blobs = []
+        for h in range(3):
+            rec = RegionRecorder(tree, 2)
+            self.fill(rec, 0, 1.0 + h), self.fill(rec, 1, 1.0 + h)
+            blobs.append(rec.snapshot().to_bytes(rank_offset=2 * h))
+        merged = merge_blobs(blobs)
+        assert merged.n_ranks == 6 and not merged.gap_mask.any()
+        merged2 = merge_blobs([blobs[0], None, blobs[2]])
+        assert merged2.gap_mask.tolist() == [False] * 2 + [True] * 2 + [False] * 2
+
+
+class TestWireValidation:
+    def test_bad_magic_and_version(self):
+        snap = RegionRecorder(make_tree(2), 1).snapshot()
+        blob = snap.to_bytes()
+        with pytest.raises(WireFormatError, match="magic"):
+            WindowSnapshot.from_bytes(b"XXXX" + blob[4:])
+        bad_ver = blob[:4] + bytes([WIRE_VERSION + 1, 0]) + blob[6:]
+        with pytest.raises(WireFormatError, match="version"):
+            WindowSnapshot.from_bytes(bad_ver)
+        with pytest.raises(WireFormatError, match="truncated"):
+            WindowSnapshot.from_bytes(blob[:3])
+        with pytest.raises(WireFormatError, match="payload"):
+            WindowSnapshot.from_bytes(blob[:-8])
+        assert blob[:4] == WIRE_MAGIC
+
+    def test_tree_mismatch_rejected(self):
+        snap = RegionRecorder(make_tree(2), 1).snapshot()
+        with pytest.raises(WireFormatError, match="tree mismatch"):
+            WindowSnapshot.from_bytes(snap.to_bytes(), tree=make_tree(3))
+
+    def test_matching_local_tree_is_reused(self):
+        tree = make_tree(2)
+        snap = RegionRecorder(tree, 1).snapshot()
+        back = WindowSnapshot.from_bytes(snap.to_bytes(), tree=tree)
+        assert back.tree is tree
+
+    def test_unregistered_schema_rebuilt_from_spec(self):
+        from repro.perfdbg import AttributeField, AttributeSchema
+        sch = AttributeSchema("wire-only", (AttributeField("q_depth"),))
+        tree = make_tree(2)
+        rec = RegionRecorder(tree, 1, schema=sch)
+        rec.add(0, 1, cpu_time=1.0, q_depth=7.0)
+        back = WindowSnapshot.from_bytes(rec.snapshot().to_bytes())
+        assert back.schema.name == "wire-only"
+        assert back.attributes()["q_depth"][0, 0] == 7.0
+
+
+class TestCollector:
+    def test_single_process_gather_is_identity_merge(self):
+        from repro.launch.collect import SnapshotCollector
+        tree = make_tree(3)
+        rec = RegionRecorder(tree, 2)
+        rec.add(0, 1, cpu_time=1.0, wall_time=1.0)
+        rec.add_program_wall(0, 1.0)
+        snap = rec.snapshot("w")
+        merged = SnapshotCollector().gather(snap)
+        assert merged.n_ranks == 2 and not merged.gap_mask.any()
+        np.testing.assert_array_equal(merged.data["cpu_time"],
+                                      snap.data["cpu_time"])
+        assert merged.label == "w"

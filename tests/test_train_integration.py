@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.integration
+
 from repro.configs import reduced_config
 from repro.data.pipeline import SyntheticTokens
 from repro.launch import steps as steps_lib
