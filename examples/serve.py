@@ -1,7 +1,8 @@
-"""Batched serving demo: prefill + decode rounds with streaming analysis.
+"""Batched serving demo: prefill + decode rounds with streaming analysis
+and window-adaptive policies.
 
     PYTHONPATH=src python examples/serve.py [--arch mixtral-8x7b] \
-        [--tokens 8] [--rounds 3] [--schema paper|tpu]
+        [--tokens 8] [--rounds 3] [--schema paper|tpu] [--policies all]
 
 Runs a reduced config of the chosen architecture, prefills a batch of
 prompts, then decodes ``--tokens`` tokens per request per round.  Each round
@@ -9,6 +10,11 @@ is one collection window: the recorder is frozen and reset, the window is
 handed to an AsyncAnalysisSession (analysis happens off the serving loop;
 ``--sync-analysis`` opts back into inline analysis), and the final report
 shows the per-window timeline (regions: prefill / decode / detokenize).
+
+``--policies`` attaches a ``core.policy.PolicyEngine`` to the window
+stream; the PolicyLog tail is printed after every decode round, so the
+detect -> decide loop is visible live (on this single-shard demo the
+straggler policies stay quiet — the audit trail is the point).
 """
 import argparse
 import time
@@ -18,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced_config
-from repro.core import AnalysisSession, AsyncAnalysisSession, RegionTree
+from repro.core import (AnalysisSession, AsyncAnalysisSession, PolicyEngine,
+                        RegionTree, make_policies)
 from repro.models import init_params
 from repro.models.model import decode_step, prefill
 from repro.perfdbg import Instrumenter, RegionRecorder
@@ -37,6 +44,12 @@ def main() -> int:
     ap.add_argument("--sync-analysis", action="store_true",
                     help="analyze each round inline instead of on the "
                          "async worker thread")
+    ap.add_argument("--policies", default="",
+                    help="comma list of window-adaptive policies "
+                         "(rebalance,reshard,quarantine or 'all')")
+    ap.add_argument("--policy-window-k", type=int, default=2,
+                    help="debounce: consecutive confirming windows before "
+                         "a policy fires")
     args = ap.parse_args()
     if args.rounds < 1 or args.tokens < 1:
         ap.error("--rounds and --tokens must be >= 1")
@@ -54,9 +67,18 @@ def main() -> int:
     rec = RegionRecorder(tree, 1, schema=args.schema)
     ins = Instrumenter(rec, 0)
 
+    engine = None
+    if args.policies:
+        engine = PolicyEngine(make_policies(args.policies),
+                              k=args.policy_window_k)
+
     def on_window(entry):
         cccrs = [tree.name(r) for r in entry.report.internal.cccrs]
         print(f"[{entry.title()}] internal bottlenecks: {cccrs or ['(none)']}")
+        if engine is not None:   # the decide half of the closed loop, live
+            print(f"[{entry.title()}] policy log tail:")
+            for line in engine.log.render(3).splitlines():
+                print(f"  {line}")
 
     if args.sync_analysis:
         session, pipe = AnalysisSession(tree), None
@@ -64,7 +86,8 @@ def main() -> int:
         # decode rounds only pay the snapshot copy; the analysis worker
         # drains the (bounded) queue behind the serving loop
         session, pipe = None, AsyncAnalysisSession(tree, max_queue=4,
-                                                   on_window=on_window)
+                                                   on_window=on_window,
+                                                   policy_engine=engine)
     io_kw = "host_io_bytes" if args.schema == "tpu" else "disk_io"
 
     prefill_j = jax.jit(lambda p, t: prefill(p, cfg, t, s_buf))
@@ -73,6 +96,7 @@ def main() -> int:
     out_tokens = []
     cache = None
     decode_wall = 0.0
+    sync_actions = []
     for rnd in range(args.rounds):
         with ins.program():
             if rnd == 0:
@@ -104,9 +128,17 @@ def main() -> int:
         if pipe is not None:
             pipe.submit_recorder(rec, label=f"round {rnd}")
         else:
-            on_window(session.ingest_recorder(rec, label=f"round {rnd}"))
+            entry = session.ingest_recorder(rec, label=f"round {rnd}")
+            if engine is not None:
+                sync_actions += engine.observe(entry, session)
+            on_window(entry)
 
     report = session.report() if pipe is None else pipe.close()
+    if engine is not None:
+        actions = pipe.take_actions() if pipe is not None else sync_actions
+        print(f"[serve] policy decisions: {len(engine.log)} "
+              f"({len(engine.log.fired())} fired, "
+              f"{len(actions)} action(s) collected)")
     seqs = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     print(f"\n[serve] {cfg.name} (reduced, schema={args.schema}): "
           f"batch={args.batch} prompt={args.prompt_len} "

@@ -24,12 +24,18 @@ from .roughset import (CoreResult, DecisionTable, discernibility_matrix,
                        internal_decision_table, root_causes)
 from .pipeline import (AsyncAnalysisSession, BACKPRESSURE_POLICIES,
                        PipelineClosed)
+from .policy import (Action, BUILTIN_POLICIES, CollectorQuarantinePolicy,
+                     Decision, Policy, PolicyEngine, PolicyLog,
+                     RebalancePolicy, ReshardPolicy, make_policies)
 from .session import (AnalysisSession, SessionReport, WindowDiff, WindowEntry,
                       analyze_window, diff_reports)
 from .vectors import (canonical_partition, keep_columns, lengths,
                       pairwise_distances, severity_S, zero_columns)
 
 __all__ = [
+    "Action", "BUILTIN_POLICIES", "CollectorQuarantinePolicy", "Decision",
+    "Policy", "PolicyEngine", "PolicyLog", "RebalancePolicy", "ReshardPolicy",
+    "make_policies",
     "AnalysisReport", "AnalysisSession", "AsyncAnalysisSession",
     "BACKPRESSURE_POLICIES", "PipelineClosed", "AutoAnalyzer", "Measurements",
     "PAPER_ATTRIBUTES", "RootCauseReport", "SessionReport", "WindowDiff",

@@ -1,4 +1,5 @@
-"""Off-critical-path analysis: AnalysisSession behind a worker thread.
+"""Off-critical-path analysis: AnalysisSession behind a worker thread
+(core layer: threading only — no jax, no transport; the drivers own both).
 
 The paper's pipeline is cheap (clustering over an m x n matrix), but "cheap"
 is still synchronous work on the training step loop.  ``AsyncAnalysisSession``
@@ -18,14 +19,24 @@ Contract:
   returns the current ``SessionReport``.
 * ``close()`` drains, stops the worker, and returns the final report; the
   session is also a context manager (``with AsyncAnalysisSession(t) as s:``).
-* A crash in the worker (analysis or the ``on_window`` callback) is captured
-  and re-raised from the next ``submit``/``drain``/``close``.
+* A crash in the worker (analysis, the policy engine, or the ``on_window``
+  callback) is captured and re-raised from the next ``submit``/``drain``/
+  ``close``.
+* A ``policy_engine`` (``core.policy.PolicyEngine``) attached at
+  construction runs on the worker thread after each window is analyzed —
+  *before* ``on_window``, so the callback can print this window's
+  decisions.  Fired actions accumulate and are collected with
+  ``take_actions()``; after ``drain()`` returns, every action from every
+  window submitted before the drain has been collected or is collectable.
+  Because windows are analyzed strictly in submission order, the engine
+  sees the identical entry stream the synchronous driver would feed it —
+  policy decisions are deterministic across the two paths.
 """
 from __future__ import annotations
 
 import collections
 import threading
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 from .regions import RegionTree
 from .session import AnalysisSession, SessionReport, WindowEntry
@@ -51,7 +62,8 @@ class AsyncAnalysisSession:
     def __init__(self, tree: RegionTree, *, keep_windows: Optional[int] = None,
                  max_queue: int = 8, backpressure: str = BLOCK,
                  on_window: Optional[Callable[[WindowEntry], None]] = None,
-                 session: Optional[AnalysisSession] = None):
+                 session: Optional[AnalysisSession] = None,
+                 policy_engine=None):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(f"backpressure must be one of "
                              f"{BACKPRESSURE_POLICIES}, got {backpressure!r}")
@@ -63,6 +75,8 @@ class AsyncAnalysisSession:
         self._max_queue = max_queue
         self._policy = backpressure
         self._on_window = on_window
+        self._engine = policy_engine
+        self._actions: List = []   # fired, not yet taken (guarded by _cv)
         self._q: collections.deque = collections.deque()
         self._cv = threading.Condition()
         self._submitted = 0      # windows accepted into the queue
@@ -87,14 +101,19 @@ class AsyncAnalysisSession:
                 self._cv.notify_all()    # a blocked producer may proceed
             err = None
             ingested = False
+            fired = []
             try:
                 entry = self._session.ingest_snapshot(snap, label=label)
                 ingested = True
+                if self._engine is not None:
+                    fired = self._engine.observe(entry, self._session)
                 if self._on_window is not None:
                     self._on_window(entry)
             except BaseException as e:   # propagate to the producer side
                 err = e
             with self._cv:
+                if fired:
+                    self._actions.extend(fired)
                 if err is not None:
                     if not ingested:   # a callback crash still ingested
                         self._failed += 1
@@ -170,6 +189,24 @@ class AsyncAnalysisSession:
         except Exception:
             if exc[0] is None:
                 raise
+
+    # -- policy actions ------------------------------------------------------
+    def take_actions(self) -> List:
+        """Collect (and clear) the policy actions fired since the last call.
+        ``drain()`` is the synchronization point: after it returns, this
+        holds every action from every window submitted before the drain.
+        Safe from any thread; the step loop typically polls it per window
+        to apply rebalance weights / resharding."""
+        with self._cv:
+            out, self._actions = self._actions, []
+        return out
+
+    @property
+    def policy_log(self):
+        """The attached engine's :class:`~repro.core.policy.PolicyLog`
+        (``None`` without an engine).  The log is appended on the worker
+        thread — read it inside ``on_window`` or after ``drain``/``close``."""
+        return self._engine.log if self._engine is not None else None
 
     # -- introspection -------------------------------------------------------
     @property

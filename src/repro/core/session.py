@@ -1,4 +1,5 @@
-"""Streaming analysis sessions: AutoAnalyzer over successive windows.
+"""Streaming analysis sessions: AutoAnalyzer over successive windows
+(core layer: pure numpy over frozen snapshots; no jax, no transport).
 
 The paper runs its locate -> root-cause pipeline once, over a whole run.
 For continuous (production) analysis we instead consume *windows* of a live
@@ -93,12 +94,24 @@ def diff_reports(prev: Optional[AnalysisReport],
 class WindowEntry:
     """One analyzed window: the full report (with its clustering result and
     rough-set decision tables cached inside) plus the diff vs the previous
-    window."""
+    window.
+
+    ``gap_ranks`` and ``rank_cpu`` ride along from the snapshot so downstream
+    consumers (straggler detection, ``core.policy`` engines) never need the
+    raw matrices back: ``gap_ranks`` are ranks the merged pod view had no
+    shard for (zero-filled rows), ``rank_cpu`` is each rank's total region
+    CPU time this window.
+
+    The verdict accessors below are the *stable keys policies observe*:
+    their names and semantics are part of the public API
+    (see ``docs/policies.md``)."""
 
     index: int
     label: Optional[str]
     report: AnalysisReport
     diff: WindowDiff
+    gap_ranks: Tuple[int, ...] = ()
+    rank_cpu: Tuple[float, ...] = ()
 
     @property
     def clustering(self):
@@ -115,6 +128,26 @@ class WindowEntry:
 
     def title(self) -> str:
         return self.label or f"window {self.index}"
+
+    # -- stable verdict accessors (the policy-facing surface) ---------------
+    @property
+    def severity(self) -> float:
+        """The paper's external dissimilarity metric S for this window."""
+        return float(self.report.external.severity)
+
+    def straggler_verdict(self):
+        """Gap-aware :class:`repro.perfdbg.straggler.StragglerVerdict` for
+        this window (a masked rank is *missing*, never a fast outlier)."""
+        from repro.perfdbg.straggler import detect   # lazy: avoids cycle
+        return detect(self.report, gap_ranks=self.gap_ranks)
+
+    def core_attributes(self, which: str = "external") -> Tuple[str, ...]:
+        """The rough-set core for ``which`` ("external" or "internal") —
+        the attribute names the decision table cannot discern bottlenecks
+        without; ``()`` when that analysis found no bottleneck."""
+        rc = (self.report.external_root_causes if which == "external"
+              else self.report.internal_root_causes)
+        return rc.core.core if rc is not None else ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,7 +200,14 @@ class SessionReport:
 class AnalysisSession:
     """Consumes successive window snapshots of a live run and maintains the
     per-window reports + cross-window diffs.  ``keep_windows`` bounds memory
-    for long sessions (oldest entries are dropped; indices keep counting)."""
+    for long sessions (oldest entries are dropped; indices keep counting).
+
+    Invariants: windows are analyzed in ingestion order and entry indices
+    are assigned monotonically from 0; analysis is deterministic, so two
+    sessions fed the same snapshot stream produce byte-identical
+    ``report().render()`` output (this is what lets the async pipeline and
+    any attached policy engine mirror the synchronous path exactly).  Not
+    thread-safe — one ingesting thread per session."""
 
     def __init__(self, tree: RegionTree, keep_windows: Optional[int] = None):
         self.tree = tree
@@ -189,12 +229,19 @@ class AnalysisSession:
     # -- ingestion -----------------------------------------------------------
     def ingest(self, measurements: Measurements,
                attributes: Mapping[str, np.ndarray],
-               label: Optional[str] = None) -> WindowEntry:
-        """Analyze one window of raw matrices and append it to the timeline."""
+               label: Optional[str] = None,
+               gap_ranks: Tuple[int, ...] = ()) -> WindowEntry:
+        """Analyze one window of raw matrices and append it to the timeline.
+        ``gap_ranks`` marks ranks whose rows are zero-filled placeholders
+        (missing hosts in a merged pod view)."""
         report = analyze_window(self.tree, measurements, attributes)
         prev = self._entries[-1].report if self._entries else None
+        rank_cpu = tuple(float(x) for x in
+                         as_matrix(measurements.cpu_time).sum(axis=1))
         entry = WindowEntry(self._next_index, label, report,
-                            diff_reports(prev, report))
+                            diff_reports(prev, report),
+                            gap_ranks=tuple(int(r) for r in gap_ranks),
+                            rank_cpu=rank_cpu)
         self._next_index += 1
         self._entries.append(entry)
         if self.keep_windows is not None and len(self._entries) > self.keep_windows:
@@ -202,9 +249,13 @@ class AnalysisSession:
         return entry
 
     def ingest_snapshot(self, snap, label: Optional[str] = None) -> WindowEntry:
-        """Analyze a ``perfdbg.recorder.WindowSnapshot``."""
+        """Analyze a ``perfdbg.recorder.WindowSnapshot``; the snapshot's
+        ``gap_mask`` (merged pod views) becomes the entry's ``gap_ranks``."""
+        mask = getattr(snap, "gap_mask", None)
+        gaps = tuple(int(r) for r in np.flatnonzero(mask)) \
+            if mask is not None else ()
         return self.ingest(snap.measurements(), snap.attributes(),
-                           label=label or snap.label)
+                           label=label or snap.label, gap_ranks=gaps)
 
     def ingest_recorder(self, recorder, label: Optional[str] = None
                         ) -> WindowEntry:

@@ -1,4 +1,4 @@
-"""Pod-wide snapshot collection.
+"""Pod-wide snapshot collection (launch layer: transport over perfdbg blobs).
 
 Each host of a pod records only its own shard of the mesh; the paper's
 analysis needs the single view of all m processes.  The 125*n*m-byte
@@ -8,18 +8,28 @@ the blobs are allgathered and merged into one m-rank snapshot.
 
 Two layers, so the merge logic is testable without a pod:
 
-* :func:`merge_blobs` — pure bytes in, merged snapshot out.  ``None``
-  entries are missing hosts and surface in the merged ``gap_mask``.
+* :func:`merge_blobs` — pure bytes in, merged snapshot out.  ``None`` (or
+  empty) entries are missing hosts and surface in the merged ``gap_mask``.
 * :class:`SnapshotCollector` — ``jax.experimental.multihost_utils.
   process_allgather``-backed transport over the blobs.  On a single-process
   runtime it degenerates to a local merge of one shard (same code path).
 
-Importing this module never touches jax device state (dry-run requirement);
-jax loads inside methods only.
+Resilience: a host that cannot produce its shard ships an **empty payload**
+instead of stalling the pod.  ``gather`` accepts ``snap=None`` (nothing to
+contribute), and ``gather_timed`` bounds the time spent *producing* the
+local snapshot — on timeout the host still joins the collective (it must:
+an allgather is cooperative) but contributes nothing, and its ranks appear
+in the merged snapshot's ``gap_mask``.  Downstream, straggler analysis
+treats gap-masked ranks as *missing* (never "fast") and
+``core.policy.CollectorQuarantinePolicy`` flags hosts that stay gone.
+
+Invariant: importing this module never touches jax device state (dry-run
+requirement); jax loads inside methods only.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+import threading
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -29,9 +39,10 @@ from repro.perfdbg.recorder import WindowSnapshot, merge_snapshots
 def merge_blobs(blobs: Sequence[Optional[bytes]], tree=None,
                 total_ranks: Optional[int] = None) -> WindowSnapshot:
     """Deserialize per-host snapshot blobs and merge into one pod view.
+    ``None`` or empty entries are missing hosts (their ranks gap-mask).
     The pure-bytes fallback path: what :class:`SnapshotCollector` does after
     transport, minus the transport."""
-    shards = [None if b is None else WindowSnapshot.from_bytes(b, tree=tree)
+    shards = [None if not b else WindowSnapshot.from_bytes(b, tree=tree)
               for b in blobs]
     return merge_snapshots(shards, total_ranks=total_ranks)
 
@@ -42,10 +53,16 @@ class SnapshotCollector:
     ``rank_offset`` places this host's shard in the global rank space;
     by default host h with an m-rank local shard covers ranks
     [h*m, (h+1)*m) — the usual contiguous per-host layout.
+
+    ``timeout`` (seconds) bounds local snapshot *production* in
+    :meth:`gather_timed`; the collective itself is cooperative and cannot
+    abandon a host mid-allgather.
     """
 
-    def __init__(self, rank_offset: Optional[int] = None):
+    def __init__(self, rank_offset: Optional[int] = None,
+                 timeout: Optional[float] = None):
         self._rank_offset = rank_offset
+        self.timeout = timeout
 
     @property
     def process_index(self) -> int:
@@ -57,25 +74,61 @@ class SnapshotCollector:
         import jax
         return jax.process_count()
 
-    def gather(self, snap: WindowSnapshot) -> WindowSnapshot:
+    def gather(self, snap: Optional[WindowSnapshot],
+               total_ranks: Optional[int] = None) -> WindowSnapshot:
         """Allgather this host's shard with every other host's and merge.
-        Every host returns the same merged m-rank snapshot."""
-        off = self._rank_offset if self._rank_offset is not None \
-            else self.process_index * snap.n_ranks
-        blob = snap.to_bytes(rank_offset=off)
+        Every host returns the same merged m-rank snapshot.
+
+        ``snap=None`` means this host has nothing to contribute (e.g. its
+        snapshot timed out): it ships an empty payload, still participates
+        in the collective, and its ranks appear in the merged ``gap_mask``
+        (pass ``total_ranks`` so the merge knows the pod width).  If *no*
+        host contributed, there is nothing to merge and a ``ValueError``
+        surfaces from :func:`merge_snapshots`."""
+        if snap is None:
+            blob, tree = b"", None
+        else:
+            off = self._rank_offset if self._rank_offset is not None \
+                else self.process_index * snap.n_ranks
+            blob, tree = snap.to_bytes(rank_offset=off), snap.tree
         if self.process_count == 1:
-            return merge_blobs([blob], tree=snap.tree)
-        return merge_blobs(self._allgather(blob), tree=snap.tree)
+            return merge_blobs([blob], tree=tree, total_ranks=total_ranks)
+        return merge_blobs(self._allgather(blob), tree=tree,
+                           total_ranks=total_ranks)
+
+    def gather_timed(self, snapshot_fn: Callable[[], WindowSnapshot],
+                     total_ranks: Optional[int] = None) -> WindowSnapshot:
+        """Produce the local shard with ``snapshot_fn()`` under the
+        collector's ``timeout``, then :meth:`gather` it.  A host whose
+        snapshot is not ready in time ships ``None`` — the pod is never
+        blocked by one wedged recorder, and the window arrives with that
+        host's ranks gap-masked.
+
+        The abandoned producer thread is a daemon whose late *result* is
+        discarded — but its side effects are not.  ``snapshot_fn`` must
+        therefore be a pure freeze (``recorder.snapshot``), never a
+        mutation like ``recorder.reset_window``: a late reset would race
+        the next window's recording."""
+        if self.timeout is None:
+            return self.gather(snapshot_fn(), total_ranks=total_ranks)
+        box: list = []
+        worker = threading.Thread(target=lambda: box.append(snapshot_fn()),
+                                  daemon=True)
+        worker.start()
+        worker.join(self.timeout)
+        snap = box[0] if box else None
+        return self.gather(snap, total_ranks=total_ranks)
 
     def _allgather(self, blob: bytes) -> list:
         """Ship variable-length blobs via two fixed-shape allgathers:
-        sizes first, then the max-size-padded payloads."""
+        sizes first, then the max-size-padded payloads.  A zero-size entry
+        is a host that contributed nothing and comes back as ``None``."""
         from jax.experimental.multihost_utils import process_allgather
         local = np.frombuffer(blob, dtype=np.uint8)
         sizes = np.asarray(process_allgather(
             np.asarray([local.size], dtype=np.int64))).reshape(-1)
-        padded = np.zeros(int(sizes.max()), dtype=np.uint8)
+        padded = np.zeros(max(int(sizes.max()), 1), dtype=np.uint8)
         padded[:local.size] = local
         stacked = np.asarray(process_allgather(padded))
-        return [stacked[i, :int(sizes[i])].tobytes()
+        return [stacked[i, :int(sizes[i])].tobytes() if sizes[i] else None
                 for i in range(stacked.shape[0])]

@@ -1,4 +1,5 @@
-"""Training driver: instrumented, fault-tolerant, streaming-analyzed.
+"""Training driver: instrumented, fault-tolerant, streaming-analyzed,
+policy-actuated (launch layer: everything below is mechanism, this is use).
 
     PYTHONPATH=src python -m repro.launch.train --arch yi-34b --reduced \
         --steps 30 --batch 4 --seq 128 --ckpt-dir /tmp/ckpt --analyze-every 10
@@ -16,13 +17,22 @@ Features exercised end-to-end (CPU-sized here, mesh-parametric for pods):
   * --schema selects the attribute set (paper PAPI-era vs tpu roofline)
   * --inject-bottleneck-at N burns CPU in the data region from step N
     (a synthetic mid-run regression for exercising the streaming analyzer)
+  * --policies attaches a core.policy.PolicyEngine to the window stream
+    (debounced by --policy-window-k); fired actions are applied to the run
+    and every decision lands in the auditable PolicyLog
+  * --sim-ranks M runs the closed-loop rebalance demo: an M-rank pod is
+    simulated by scaling rank-0's measured region times by per-rank work
+    shares.  --inject-bottleneck-at then slows the *last simulated rank*
+    (a sick host) instead of burning CPU; when RebalancePolicy fires, its
+    weights feed back into the work shares, the straggler's share shrinks,
+    it leaves the verdict, and the per-window pod rate recovers
   * periodic + final checkpoints (atomic, async), auto-restart from latest
-  * straggler policy hook (needs >1 shard to trigger; wired regardless)
   * deterministic data pipeline whose state lives in the checkpoint
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import sys
 import time
 
@@ -59,23 +69,40 @@ def main(argv=None) -> int:
                          "analysis (no-op transport on one process)")
     ap.add_argument("--inject-bottleneck-at", type=int, default=0,
                     help="if >0, burn CPU in the data region from this step "
-                         "(synthetic mid-run bottleneck)")
+                         "(synthetic mid-run bottleneck); with --sim-ranks "
+                         "> 1 it instead slows the last simulated rank")
     ap.add_argument("--inject-ms", type=float, default=30.0)
+    ap.add_argument("--policies", default="",
+                    help="comma list of window-adaptive policies to attach "
+                         "(rebalance,reshard,quarantine or 'all'); empty = "
+                         "detection only")
+    ap.add_argument("--policy-window-k", type=int, default=2,
+                    help="debounce: consecutive confirming windows before "
+                         "a policy fires")
+    ap.add_argument("--sim-ranks", type=int, default=1,
+                    help="simulate an M-rank pod from rank-0 measurements "
+                         "(per-rank work shares; enables the closed-loop "
+                         "rebalance demo)")
+    ap.add_argument("--inject-factor", type=float, default=4.0,
+                    help="slowdown of the last simulated rank under "
+                         "--sim-ranks + --inject-bottleneck-at")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args(argv)
 
     import jax
     import jax.numpy as jnp
     from repro.configs import reduced_config, get_config
-    from repro.core import AnalysisSession, AsyncAnalysisSession, RegionTree
+    from repro.core import (AnalysisSession, AsyncAnalysisSession,
+                            PolicyEngine, RegionTree, make_policies)
     from repro.data.pipeline import SyntheticTokens
     from repro.launch.collect import SnapshotCollector
     from repro.launch.mesh import make_host_mesh
     from repro.launch import steps as steps_lib
     from repro.models.model import input_specs
     from repro.optim import adamw
-    from repro.perfdbg import Instrumenter, RegionRecorder, detect
+    from repro.perfdbg import Instrumenter, RegionRecorder
     from repro.perfdbg.attributes import RIDGE_INTENSITY
+    from repro.perfdbg.instrument import CPU_CLOCK, NOMINAL_HZ
     from repro.ckpt import checkpoint as ckpt
 
     overrides = dict(d_model=args.d_model,
@@ -114,16 +141,72 @@ def main(argv=None) -> int:
             print(f"[train] restored step {start_step} from {args.ckpt_dir}",
                   flush=True)
 
-    # region tree for the instrumented step (m = 1 shard on this container;
-    # external/straggler analysis activates with multi-shard recorders)
+    # region tree for the instrumented step.  M = 1: the real single shard
+    # of this container.  M > 1: a simulated pod — rank 0's measured times
+    # are scaled by per-rank work shares (and the injected slow factor for
+    # the last rank), so external/straggler analysis and the closed
+    # rebalance loop run for real on synthetic-but-live data.
+    M = max(args.sim_ranks, 1)
     tree = RegionTree("train")
     for nm in ("data", "step", "checkpoint"):
         tree.add(nm)
-    rec = RegionRecorder(tree, n_ranks=1, schema=args.schema)
+    rec = RegionRecorder(tree, n_ranks=M, schema=args.schema)
     ins = Instrumenter(rec, rank=0)
+    rids = {tree.name(r): r for r in tree.ids()}
+    shares = np.full(M, 1.0 / M)          # fraction of global work per rank
+    sim = {"slow": 1.0}                   # last rank's current slow factor
+
+    @contextlib.contextmanager
+    def region(name, *, instructions=0.0, nominal_cpi=None, **attrs):
+        """Instrument one region for the whole (real or simulated) pod."""
+        if M == 1:
+            with ins.region(name, instructions=instructions,
+                            nominal_cpi=nominal_cpi, **attrs):
+                yield
+            return
+        w0, c0 = time.perf_counter(), CPU_CLOCK()
+        try:
+            yield
+        finally:
+            wall, cpu = time.perf_counter() - w0, CPU_CLOCK() - c0
+            cycles = cpu * NOMINAL_HZ
+            instr = instructions
+            if nominal_cpi is not None and not instr:
+                instr = cycles / nominal_cpi
+            for r in range(M):
+                f = shares[r] / max(shares[0], 1e-12)
+                s = sim["slow"] if r == M - 1 else 1.0
+                # a sick host does the same work (instructions scale with
+                # its share only), just slower (times scale with s too)
+                rec.add(r, rids[name], cpu_time=cpu * f * s,
+                        wall_time=wall * f * s, cycles=cycles * f * s,
+                        instructions=instr * f, **attrs)
+
+    @contextlib.contextmanager
+    def program():
+        if M == 1:
+            with ins.program():
+                yield
+            return
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            pw = time.perf_counter() - t0
+            for r in range(M):
+                f = shares[r] / max(shares[0], 1e-12)
+                s = sim["slow"] if r == M - 1 else 1.0
+                rec.add_program_wall(r, pw * f * s)
+
+    engine = None
+    if args.policies:
+        engine = PolicyEngine(make_policies(args.policies),
+                              k=args.policy_window_k)
+
+    win_tokens = {}   # window index -> tokens it covered (for the rate line)
 
     def on_window(entry):
-        verdict = detect(entry.report)
+        verdict = entry.straggler_verdict()
         line = (f"[window {entry.index}] {entry.title()} internal: "
                 f"{[tree.name(r) for r in entry.report.internal.cccrs]}")
         if entry.diff.appeared:
@@ -132,7 +215,33 @@ def main(argv=None) -> int:
         if entry.diff.disappeared:
             line += (" | disappeared: "
                      f"{[tree.name(r) for r in entry.diff.disappeared]}")
+        toks = win_tokens.pop(entry.label, None)
+        if toks and entry.rank_cpu:
+            present = [c for r, c in enumerate(entry.rank_cpu)
+                       if r not in entry.gap_ranks]
+            line += (f" | pod rate {toks / max(max(present), 1e-9):,.0f} "
+                     f"tok/s")
         print(line + f" | {verdict.render().splitlines()[0]}", flush=True)
+        if engine is not None:
+            for d in engine.log.for_window(entry.index):
+                print(f"[policy] {d.render()}", flush=True)
+
+    def apply_actions(actions):
+        nonlocal shares
+        for act in actions:
+            if act.kind == "rebalance" and "weights" in act.params:
+                w = np.asarray(act.params["weights"], dtype=np.float64)
+                if w.sum() > 0:
+                    shares = w / w.sum()
+                print(f"[policy] applied rebalance from window {act.window}: "
+                      f"shares -> {np.round(shares, 3).tolist()}", flush=True)
+            elif act.kind == "reshard":
+                print(f"[policy] reshard fired (window {act.window}, "
+                      f"core names {act.target!r}): repartition the data "
+                      f"pipeline", flush=True)
+            elif act.kind == "quarantine":
+                print(f"[policy] quarantine fired: rank {act.target} missing "
+                      f"since window {act.evidence[0]}", flush=True)
 
     collector = SnapshotCollector() if args.pod_gather else None
     if args.sync_analysis:
@@ -142,7 +251,7 @@ def main(argv=None) -> int:
         pipeline = AsyncAnalysisSession(
             tree, max_queue=args.analysis_queue,
             backpressure=args.analysis_backpressure.replace("-", "_"),
-            on_window=on_window)
+            on_window=on_window, policy_engine=engine)
 
     tokens_per_step = args.batch * args.seq
     flops_per_step = 6 * cfg.active_params() * tokens_per_step
@@ -173,35 +282,47 @@ def main(argv=None) -> int:
         assert rec.within_paper_budget()
         label = f"steps {win_start + 1}-{last_step + 1}"
         snap = rec.reset_window(label)
+        # keyed by label, not index: under drop_oldest the session's entry
+        # indices fall behind the recorder's snapshot indices
+        win_tokens[label] = (last_step - win_start + 1) * tokens_per_step
         if collector is not None:
             snap = collector.gather(snap)
         if pipeline is not None:           # off-critical-path: enqueue only
             pipeline.submit(snap, label=label)
         else:
-            on_window(session.ingest_snapshot(snap, label=label))
+            entry = session.ingest_snapshot(snap, label=label)
+            fired = engine.observe(entry, session) if engine else []
+            on_window(entry)
+            apply_actions(fired)
 
     data.start_prefetch()
     losses = []
     win_start = start_step
     with mesh:
         for step in range(start_step, args.steps):
-            with ins.program():
-                with ins.region("data", nominal_cpi=1.0, **data_kw):
-                    if args.inject_bottleneck_at and \
-                            step + 1 >= args.inject_bottleneck_at:
+            injecting = args.inject_bottleneck_at and \
+                step + 1 >= args.inject_bottleneck_at
+            sim["slow"] = args.inject_factor if (M > 1 and injecting) else 1.0
+            with program():
+                with region("data", nominal_cpi=1.0, **data_kw):
+                    if injecting and M == 1:
                         burn(args.inject_ms)
                     batch = data.next_prefetched()
                     batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                with ins.region("step", instructions=flops_per_step,
-                                **step_kw):
+                with region("step", instructions=flops_per_step,
+                            **step_kw):
                     state, metrics = jitted(state, batch)
                     loss = float(metrics["loss"])
-                with ins.region("checkpoint", nominal_cpi=1.0,
-                                **ckpt_kw(0 if not saver else 1)):
+                with region("checkpoint", nominal_cpi=1.0,
+                            **ckpt_kw(0 if not saver else 1)):
                     if saver and (step + 1) % args.ckpt_every == 0:
                         saver.save(step + 1, {"state": state,
                                               "data": data.state_dict()})
             losses.append(loss)
+            if pipeline is not None:
+                # poll every step (one lock acquire): a fire lands in the
+                # shares before the *next* step, not a whole window later
+                apply_actions(pipeline.take_actions())
             if (step + 1) % max(args.analyze_every, 1) == 0:
                 flush_window(step, win_start)
                 win_start = step + 1
@@ -214,10 +335,16 @@ def main(argv=None) -> int:
 
     data.stop_prefetch()
     report = session.report() if pipeline is None else pipeline.close()
-    if pipeline is not None and pipeline.dropped:
-        print(f"[train] analysis dropped {pipeline.dropped} window(s) "
-              f"under backpressure", flush=True)
+    if pipeline is not None:
+        apply_actions(pipeline.take_actions())   # anything fired post-loop
+        if pipeline.dropped:
+            print(f"[train] analysis dropped {pipeline.dropped} window(s) "
+                  f"under backpressure", flush=True)
     print(report.render(tree), flush=True)
+    if engine is not None:
+        print(f"[train] policy log ({len(engine.log)} decision(s), "
+              f"{len(engine.log.fired())} fired):", flush=True)
+        print(engine.log.render(10), flush=True)
     if saver:
         saver.save(args.steps, {"state": state, "data": data.state_dict()})
         saver.wait()

@@ -1,5 +1,6 @@
 """Per-shard, per-region performance records — the paper's lightweight
-data layout, schema-driven and windowed.
+data layout, schema-driven and windowed (perfdbg layer: collection only;
+imports ``repro.core`` for types, never the launch drivers).
 
 The paper's headline claim: for n code regions x m processes AutoAnalyzer
 collects and analyzes at most **125*n*m bytes**, of which ~33% (the
@@ -333,7 +334,10 @@ class RegionRecorder:
 
     # -- windows -------------------------------------------------------------
     def snapshot(self, label: Optional[str] = None) -> WindowSnapshot:
-        """Freeze the live window (no reset)."""
+        """Freeze the live window (no reset): one ≤125*n*m-byte copy, the
+        only per-window cost a streaming loop pays on its critical path.
+        The returned snapshot is immutable — later ``add`` calls never
+        alias into it."""
         return WindowSnapshot(self.window_index, self.schema, self.tree,
                               self._data.copy(), self.program_wall.copy(),
                               label, rank_offset=self.rank_offset)

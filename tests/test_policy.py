@@ -1,0 +1,432 @@
+"""Window-adaptive policy engine: debounce edges, rate limiting, gap
+awareness, and the closed detect -> optimize loop (sync == async)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (AnalysisSession, AsyncAnalysisSession,
+                        CollectorQuarantinePolicy, PolicyEngine, PolicyLog,
+                        RebalancePolicy, RegionTree, ReshardPolicy,
+                        make_policies)
+from repro.perfdbg import (RegionRecorder, detect_timeline,
+                           merge_snapshots, persistent_stragglers,
+                           rebalance_weights)
+from repro.launch.collect import SnapshotCollector, merge_blobs
+
+
+def small_tree(n=3):
+    t = RegionTree()
+    for i in range(1, n + 1):
+        t.add(f"r{i}", rid=i)
+    return t
+
+
+def fill_window(rec, m, slow=None, instr_imbalance=False):
+    """One window of work: ``slow`` maps rank -> slowdown factor (same work,
+    slower — a sick host); ``instr_imbalance`` scales a straggler's
+    *instructions* too (more work handed — a data-imbalance signature)."""
+    slow = slow or {}
+    for r in range(m):
+        f = slow.get(r, 1.0)
+        instr = 1e9 * (f if instr_imbalance else 1.0)
+        for rid in (1, 2, 3):
+            rec.add(r, rid, cpu_time=f, wall_time=f, cycles=f * 2e9,
+                    instructions=instr)
+        rec.add_program_wall(r, 3 * f)
+
+
+def decision_tuples(log):
+    return [(d.window, d.policy, d.kind, d.target, d.reason, d.evidence)
+            for d in log.decisions]
+
+
+class TestDebounce:
+    def test_flap_below_k_never_fires(self):
+        """k-1 confirming windows, then the verdict clears: no fire, and
+        the suppressed decisions are in the log with their evidence."""
+        t = small_tree()
+        rec = RegionRecorder(t, 6)
+        session = AnalysisSession(t)
+        engine = PolicyEngine([RebalancePolicy()], k=3)
+        fired = []
+        # straggler in windows 0,1 only (streak 2 < 3), clean afterwards
+        for w in range(5):
+            fill_window(rec, 6, slow={5: 4.0} if w < 2 else None)
+            fired += engine.observe(session.ingest_recorder(rec), session)
+        assert fired == []
+        assert engine.log.fired() == ()
+        reasons = [d.reason for d in engine.log.decisions]
+        assert reasons == ["debounce", "debounce"]
+        assert engine.log.decisions[1].evidence == (0, 1)
+        # the flap reset the streak: a fresh straggle starts from 1 again
+        fill_window(rec, 6, slow={5: 4.0})
+        engine.observe(session.ingest_recorder(rec), session)
+        assert engine.log.decisions[-1].streak == 1
+
+    def test_exactly_k_fires_once_with_evidence(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 6)
+        session = AnalysisSession(t)
+        engine = PolicyEngine([RebalancePolicy()], k=2, cooldown=0)
+        fired = []
+        for w in range(2):
+            fill_window(rec, 6, slow={5: 4.0})
+            fired += engine.observe(session.ingest_recorder(rec), session)
+        assert len(fired) == 1
+        act = fired[0]
+        assert act.kind == "rebalance" and act.target == 5
+        assert act.window == 1 and act.evidence == (0, 1)
+        w = np.asarray(act.params["weights"])
+        assert w.sum() == pytest.approx(6.0)
+        assert w[5] < w[0]          # slow rank gets less of the next window
+        # streak reset on fire: the very next confirming window debounces
+        fill_window(rec, 6, slow={5: 4.0})
+        assert engine.observe(session.ingest_recorder(rec), session) == []
+        assert engine.log.decisions[-1].reason == "debounce"
+        assert engine.log.decisions[-1].streak == 1
+
+    def test_k1_fires_immediately(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 6)
+        session = AnalysisSession(t)
+        engine = PolicyEngine([RebalancePolicy()], k=1, cooldown=0)
+        fill_window(rec, 6, slow={5: 4.0})
+        fired = engine.observe(session.ingest_recorder(rec), session)
+        assert len(fired) == 1 and fired[0].evidence == (0,)
+
+    def test_rate_limit_suppression_logged(self):
+        """A persistent condition under a long cooldown: one fire, then
+        rate_limited decisions until the cooldown expires."""
+        t = small_tree()
+        rec = RegionRecorder(t, 6)
+        session = AnalysisSession(t)
+        engine = PolicyEngine([RebalancePolicy()], k=2, cooldown=5)
+        fired = []
+        for w in range(8):
+            fill_window(rec, 6, slow={5: 4.0})
+            fired += engine.observe(session.ingest_recorder(rec), session)
+        # fire at w1 (evidence 0,1); cooldown 5 suppresses through w6;
+        # streak keeps accumulating, so w7 (> w1+5) fires again
+        assert [a.window for a in fired] == [1, 7]
+        limited = [d for d in engine.log.decisions
+                   if d.reason == "rate_limited"]
+        assert [d.window for d in limited] == [3, 4, 5, 6]
+        assert limited[0].evidence == (2, 3)     # evidence still audited
+        assert "rate_limited" in engine.log.render()
+
+    def test_log_bounded_and_helpers(self):
+        log = PolicyLog(max_entries=3)
+        engine = PolicyEngine([RebalancePolicy()], k=2, log=log)
+        t = small_tree()
+        rec = RegionRecorder(t, 6)
+        session = AnalysisSession(t)
+        for w in range(5):
+            fill_window(rec, 6, slow={5: 4.0})
+            engine.observe(session.ingest_recorder(rec), session)
+        assert len(log) == 3
+        assert len(log.tail(2)) == 2
+        assert log.for_window(4)[0].window == 4
+
+    def test_engine_validation(self):
+        with pytest.raises(ValueError):
+            PolicyEngine([RebalancePolicy()], k=0)
+        with pytest.raises(ValueError):
+            PolicyEngine([RebalancePolicy(), RebalancePolicy()])
+        with pytest.raises(ValueError):
+            make_policies("nonsense")
+        assert [p.name for p in make_policies("all")] == \
+            ["rebalance", "reshard", "quarantine"]
+
+
+class TestGapAwareness:
+    def test_gap_masked_rank_never_a_fast_outlier(self):
+        """Zero-filled gap rows look impossibly fast to the clustering; the
+        verdict must report them as missing, never stragglers."""
+        t = small_tree()
+
+        def shard(off, m=2, slow=None):
+            r_ = RegionRecorder(t, m, rank_offset=off)
+            fill_window(r_, m, slow=slow)
+            return r_.snapshot()
+
+        # balanced present ranks, one missing host: nobody straggles
+        merged = merge_snapshots([shard(0), None, shard(4)], total_ranks=6)
+        entry = AnalysisSession(t).ingest_snapshot(merged)
+        assert entry.gap_ranks == (2, 3)
+        v = entry.straggler_verdict()
+        assert v.missing == (2, 3)
+        assert v.stragglers == ()
+        assert set(v.majority) == {0, 1, 4, 5}
+        # a real straggler among the present ranks is still caught
+        merged = merge_snapshots([shard(0), None, shard(4, slow={1: 4.0})],
+                                 total_ranks=6)
+        v = AnalysisSession(t).ingest_snapshot(merged).straggler_verdict()
+        assert v.stragglers == (5,)       # global rank 4+1
+        assert v.missing == (2, 3)
+        assert not set(v.stragglers) & set(v.missing)
+
+    def test_gaps_outnumbering_covered_ranks_do_not_define_health(self):
+        t = small_tree()
+        rec = RegionRecorder(t, 2, rank_offset=0)
+        fill_window(rec, 2)
+        merged = merge_snapshots([rec.snapshot(), None, None],
+                                 total_ranks=6)
+        v = AnalysisSession(t).ingest_snapshot(merged).straggler_verdict()
+        assert v.stragglers == ()
+        assert v.majority == (0, 1)
+        assert v.missing == (2, 3, 4, 5)
+
+    def test_detect_timeline_uses_entry_gap_ranks(self):
+        t = small_tree()
+        session = AnalysisSession(t)
+        for _ in range(2):
+            rec = RegionRecorder(t, 2, rank_offset=0)
+            fill_window(rec, 2)
+            session.ingest_snapshot(
+                merge_snapshots([rec.snapshot(), None], total_ranks=4))
+        verdicts = detect_timeline(session.report())
+        assert all(v.missing == (2, 3) for v in verdicts)
+        assert persistent_stragglers(verdicts, min_windows=2) == ()
+
+    def test_rebalance_weights_gap_aware(self):
+        w = rebalance_weights(np.asarray([1.0, 1.0, 0.0, 2.0]),
+                              gap_ranks=(2,))
+        assert w[2] == 0.0                       # no work for a missing host
+        assert w.sum() == pytest.approx(3.0)     # present ranks sum to count
+        assert w[3] < w[0]
+        with pytest.raises(ValueError):
+            rebalance_weights(np.ones(2), gap_ranks=(0, 1))
+
+    def test_quarantine_fires_per_chronically_missing_rank(self):
+        t = small_tree()
+        session = AnalysisSession(t)
+        engine = PolicyEngine([CollectorQuarantinePolicy()], k=2,
+                              cooldown=0)
+        fired = []
+        for _ in range(2):
+            rec = RegionRecorder(t, 2, rank_offset=0)
+            fill_window(rec, 2)
+            merged = merge_snapshots([rec.snapshot(), None], total_ranks=4)
+            fired += engine.observe(session.ingest_snapshot(merged), session)
+        assert sorted(a.target for a in fired) == [2, 3]
+        assert all(a.kind == "quarantine" and a.evidence == (0, 1)
+                   for a in fired)
+
+
+class TestReshardPolicy:
+    def test_fires_on_persistent_external_instructions_core(self):
+        """A rank handed ~4x the data shows 4x cpu AND 4x instructions: the
+        external rough-set core names {instructions} and reshard fires."""
+        t = small_tree()
+        rec = RegionRecorder(t, 6)
+        session = AnalysisSession(t)
+        engine = PolicyEngine([ReshardPolicy()], k=2, cooldown=0)
+        fired = []
+        for _ in range(2):
+            fill_window(rec, 6, slow={5: 4.0}, instr_imbalance=True)
+            entry = session.ingest_recorder(rec)
+            assert "instructions" in entry.core_attributes("external")
+            fired += engine.observe(entry, session)
+        assert len(fired) == 1
+        assert fired[0].kind == "reshard" and fired[0].target == "instructions"
+        assert "external" in fired[0].params["scopes"]
+
+    def test_quiet_when_imbalance_is_speed_not_work(self):
+        """Same work, slower host: instructions are uniform, so the external
+        core does not name them and reshard must stay quiet (rebalancing,
+        not resharding, is the right fix)."""
+        t = small_tree()
+        rec = RegionRecorder(t, 6)
+        session = AnalysisSession(t)
+        engine = PolicyEngine([ReshardPolicy()], k=1)
+        for _ in range(3):
+            fill_window(rec, 6, slow={5: 4.0})
+            entry = session.ingest_recorder(rec)
+            assert engine.observe(entry, session) == []
+        assert len(engine.log) == 0
+
+
+class TestCollectorResilience:
+    class FakePodCollector(SnapshotCollector):
+        """Two-host transport without a pod: the 'other' host's blob is
+        injected, ours goes through the real empty-payload path."""
+        process_count = 2
+        process_index = 0
+
+        def __init__(self, other_blob, **kw):
+            super().__init__(**kw)
+            self._other = other_blob
+
+        def _allgather(self, blob):
+            return [blob if blob else None, self._other]
+
+    def _shard(self, tree, off):
+        rec = RegionRecorder(tree, 2, rank_offset=off)
+        fill_window(rec, 2)
+        return rec.snapshot()
+
+    def test_timed_out_host_ships_gap_not_block(self):
+        t = small_tree()
+        other = self._shard(t, 2).to_bytes()
+        col = self.FakePodCollector(other, timeout=0.05)
+
+        def slow_snapshot():
+            time.sleep(10.0)
+            return self._shard(t, 0)   # pragma: no cover - abandoned
+
+        t0 = time.perf_counter()
+        pod = col.gather_timed(slow_snapshot, total_ranks=4)
+        assert time.perf_counter() - t0 < 5.0     # never waited the 10s
+        assert list(np.flatnonzero(pod.gap_mask)) == [0, 1]
+        # the shipped ranks arrived intact
+        assert pod.measurements().cpu_time[2, 0] == 1.0
+
+    def test_fast_host_ships_normally(self):
+        t = small_tree()
+        other = self._shard(t, 2).to_bytes()
+        col = self.FakePodCollector(other, timeout=5.0)
+        pod = col.gather_timed(lambda: self._shard(t, 0), total_ranks=4)
+        assert pod.gap_mask is not None and not pod.gap_mask.any()
+        assert pod.n_ranks == 4
+
+    def test_no_timeout_skips_thread(self):
+        t = small_tree()
+        other = self._shard(t, 2).to_bytes()
+        col = self.FakePodCollector(other)   # timeout=None
+        pod = col.gather_timed(lambda: self._shard(t, 0), total_ranks=4)
+        assert not pod.gap_mask.any()
+
+    def test_gather_none_single_process_raises(self):
+        col = SnapshotCollector()
+        col.__class__ = type("C1", (SnapshotCollector,),
+                             {"process_count": 1, "process_index": 0})
+        with pytest.raises(ValueError):
+            col.gather(None, total_ranks=2)
+
+    def test_merge_blobs_treats_empty_as_missing(self):
+        t = small_tree()
+        shard = self._shard(t, 0)
+        pod = merge_blobs([shard.to_bytes(), b""], total_ranks=4)
+        assert list(np.flatnonzero(pod.gap_mask)) == [2, 3]
+
+
+class ClosedLoop:
+    """Shared harness: an M-rank simulated pod whose last rank turns slow at
+    ``inject_at``; RebalancePolicy's fired weights feed back into the work
+    shares — the acceptance loop from the ISSUE."""
+
+    def run(self, async_path: bool, m=6, windows=8, inject_at=2, k=2,
+            factor=4.0):
+        t = small_tree()
+        rec = RegionRecorder(t, m)
+        shares = np.full(m, 1.0 / m)
+        engine = PolicyEngine([RebalancePolicy()], k=k, cooldown=0)
+        verdicts, fires = [], []
+        session = AnalysisSession(t)
+        pipe = AsyncAnalysisSession(t, policy_engine=engine) \
+            if async_path else None
+        try:
+            for w in range(windows):
+                for r in range(m):
+                    f = shares[r] / shares[0]
+                    s = factor if (r == m - 1 and w >= inject_at) else 1.0
+                    for rid in (1, 2, 3):
+                        rec.add(r, rid, cpu_time=f * s, wall_time=f * s,
+                                cycles=f * s * 2e9, instructions=1e9 * f)
+                    rec.add_program_wall(r, 3 * f * s)
+                if async_path:
+                    pipe.submit_recorder(rec)
+                    report = pipe.drain()
+                    fired = pipe.take_actions()
+                    entry = report.windows[-1]
+                else:
+                    entry = session.ingest_recorder(rec)
+                    fired = engine.observe(entry, session)
+                verdicts.append(entry.straggler_verdict())
+                for act in fired:
+                    fires.append(act)
+                    wts = np.asarray(act.params["weights"])
+                    shares = wts / wts.sum()
+        finally:
+            if pipe is not None:
+                pipe.close()
+        return engine.log, verdicts, fires
+
+
+class TestClosedLoop(ClosedLoop):
+    @pytest.mark.parametrize("async_path", [False, True])
+    def test_injected_rank_leaves_verdict_within_k_of_fire(self, async_path):
+        k, inject_at = 2, 2
+        log, verdicts, fires = self.run(async_path, k=k, inject_at=inject_at)
+        slow = 5
+        # straggles from the injection window...
+        assert slow in verdicts[inject_at].stragglers
+        # ...the policy fires after exactly k confirming windows...
+        assert len(fires) >= 1
+        fire_w = fires[0].window
+        assert fire_w == inject_at + k - 1
+        assert fires[0].evidence == tuple(range(inject_at, inject_at + k))
+        # ...and the rebalance clears the verdict within k windows of firing
+        for v in verdicts[fire_w + k:]:
+            assert slow not in v.stragglers
+        # the fire is in the audit log
+        fired_log = log.fired()
+        assert len(fired_log) == len(fires)
+        assert fired_log[0].window == fire_w
+        assert fired_log[0].action is not None
+
+    def test_sync_and_async_decisions_identical(self):
+        log_s, verd_s, fires_s = self.run(False)
+        log_a, verd_a, fires_a = self.run(True)
+        assert decision_tuples(log_s) == decision_tuples(log_a)
+        assert [a.render() for a in fires_s] == [a.render() for a in fires_a]
+        assert [v.stragglers for v in verd_s] == [v.stragglers for v in verd_a]
+
+
+class TestPipelinePolicyContract:
+    def test_engine_runs_before_on_window(self):
+        """on_window must be able to print this window's decisions."""
+        t = small_tree()
+        engine = PolicyEngine([RebalancePolicy()], k=1, cooldown=0)
+        seen = []
+
+        def on_window(entry):
+            seen.append((entry.index,
+                         [d.reason for d in engine.log.for_window(entry.index)]))
+
+        rec = RegionRecorder(t, 6)
+        with AsyncAnalysisSession(t, policy_engine=engine,
+                                  on_window=on_window) as pipe:
+            fill_window(rec, 6, slow={5: 4.0})
+            pipe.submit_recorder(rec)
+            pipe.drain()
+        assert seen == [(0, ["fired"])]
+
+    def test_actions_complete_after_drain(self):
+        t = small_tree()
+        engine = PolicyEngine([RebalancePolicy()], k=1, cooldown=0)
+        rec = RegionRecorder(t, 6)
+        with AsyncAnalysisSession(t, policy_engine=engine) as pipe:
+            for _ in range(3):
+                fill_window(rec, 6, slow={5: 4.0})
+                pipe.submit_recorder(rec)
+            pipe.drain()
+            acts = pipe.take_actions()
+            assert [a.window for a in acts] == [0, 1, 2]
+            assert pipe.take_actions() == []     # drained
+            assert pipe.policy_log is engine.log
+        assert AsyncAnalysisSession(t).policy_log is None
+
+    def test_engine_error_propagates(self):
+        class Boom(RebalancePolicy):
+            def observe(self, entry, session):
+                raise RuntimeError("policy exploded")
+
+        t = small_tree()
+        rec = RegionRecorder(t, 2)
+        pipe = AsyncAnalysisSession(t, policy_engine=PolicyEngine([Boom()]))
+        fill_window(rec, 2)
+        pipe.submit_recorder(rec)
+        with pytest.raises(RuntimeError):
+            pipe.drain()
