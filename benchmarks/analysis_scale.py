@@ -1,0 +1,172 @@
+"""Analysis fast-path scaling sweep: us-per-call over m ranks.
+
+Sweeps the window-analysis hot path over pod sizes m in {8, 64, 256, 1024,
+4096} and writes a flat ``{name: us_per_call}`` JSON (``BENCH_4.json`` at
+the repo root by default) — the perf trajectory future PRs diff against.
+
+Benchmarked stages (see docs/performance.md for the complexity table):
+
+* ``cluster_m{m}``          OPTICS-style density clustering, jittered rows
+                            (no duplicate collapse possible — worst case)
+* ``kmeans_n{m}_k5``        exact 1-D 5-means over m values
+* ``external_analysis_m{m}``  full CCR/CCCR search on a pod-shaped matrix
+                            (tiled ranks + one slow block, the SPMD shape)
+* ``external_jitter_m{m}``  same search with per-rank jitter (no duplicate
+                            rows, exercises the downdate path end to end)
+* ``session_window_m{m}``   AnalysisSession.ingest per window over a
+                            4-window timeline whose middle windows repeat
+                            (incremental reuse engaged, as in production)
+
+Usage:
+
+    PYTHONPATH=src python -m benchmarks.analysis_scale            # full sweep
+    PYTHONPATH=src python -m benchmarks.analysis_scale --quick    # CI tier
+    PYTHONPATH=src python -m benchmarks.analysis_scale \
+        --quick --out bench_current.json --check BENCH_4.json     # regression
+
+``--check`` compares against a baseline JSON and exits non-zero when any
+shared entry regressed by more than ``PERF_SMOKE_FACTOR`` (default 3.0; a
+deliberately generous bound — CI runners are noisy).  Set the env var
+higher to loosen the gate on flaky runners, or to ``0`` to disable it.
+"""
+import argparse
+import json
+import os
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_4.json"
+M_SWEEP = (8, 64, 256, 1024, 4096)
+QUICK_SWEEP = (8, 64, 256, 1024)
+N_REGIONS = 14
+DEFAULT_FACTOR = 3.0
+SLACK_US = 1000.0
+
+
+def _tree():
+    from repro.core import RegionTree
+    tree = RegionTree()
+    for i in range(1, N_REGIONS + 1):
+        tree.add(f"r{i}", rid=i)
+    return tree
+
+
+def _pod_matrix(m: int, rng, jitter: float = 0.0) -> np.ndarray:
+    """Pod-shaped perf matrix: tiled rank vectors, first m//8 ranks slow in
+    one region (the straggler block the search must localize)."""
+    perf = np.tile(rng.uniform(5, 10, N_REGIONS), (m, 1))
+    if jitter:
+        perf = perf * (1.0 + jitter * rng.standard_normal(perf.shape))
+    perf[: max(m // 8, 1), 3] *= 3.0
+    return perf
+
+
+def _measurements(perf: np.ndarray, rng):
+    from repro.core import Measurements
+    wall = perf * 1.05
+    return Measurements(perf, wall, wall.sum(axis=1),
+                        rng.uniform(1e6, 5e6, perf.shape),
+                        rng.uniform(1e6, 2e6, perf.shape))
+
+
+def _time(fn, reps: int) -> float:
+    fn()   # warmup: allocator, BLAS thread pools, import side effects
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run_sweep(ms, reps: int) -> dict:
+    from repro.core import AnalysisSession, analyze_external, cluster, kmeans_1d
+    tree = _tree()
+    out = {}
+
+    for m in ms:
+        rng = np.random.default_rng(m)
+        jperf = _pod_matrix(m, rng, jitter=1e-3)
+        out[f"cluster_m{m}"] = _time(lambda: cluster(jperf), reps)
+
+        vals = rng.uniform(0, 5, m)
+        out[f"kmeans_n{m}_k5"] = _time(lambda: kmeans_1d(vals), reps)
+
+        tperf = _pod_matrix(m, rng)
+        out[f"external_analysis_m{m}"] = _time(
+            lambda: analyze_external(tree, tperf), reps)
+        out[f"external_jitter_m{m}"] = _time(
+            lambda: analyze_external(tree, jperf), reps)
+
+        windows = [_measurements(tperf, rng) for _ in range(2)] \
+            + [_measurements(_pod_matrix(m, rng, jitter=1e-3), rng)]
+        attrs = {"instructions": tperf, "network_io": tperf * 0.1}
+
+        def session_timeline():
+            session = AnalysisSession(tree)
+            session.ingest(windows[0], attrs)
+            session.ingest(windows[0], attrs)    # identical -> cache hit
+            session.ingest(windows[1], attrs)
+            session.ingest(windows[2], attrs)
+            return session
+        out[f"session_window_m{m}"] = _time(session_timeline, reps) / 4.0
+
+        print(f"# m={m}: " + "  ".join(
+            f"{k.rsplit('_', 1)[0]}={out[k]:.0f}us"
+            for k in out if k.endswith(f"m{m}") or k == f"kmeans_n{m}_k5"),
+            file=sys.stderr)
+    return out
+
+
+def check_regressions(current: dict, baseline_path: pathlib.Path,
+                      factor: float) -> int:
+    baseline = json.loads(baseline_path.read_text())
+    if factor <= 0:
+        print("# PERF_SMOKE_FACTOR <= 0: regression gate disabled",
+              file=sys.stderr)
+        return 0
+    failures = []
+    for name in sorted(set(current) & set(baseline)):
+        cur, base = current[name], baseline[name]
+        # 1ms absolute slack: sub-millisecond entries are scheduler noise
+        # on shared runners; the gate is after order-of-magnitude blowups.
+        if base > 0 and cur > factor * base + SLACK_US:
+            failures.append(f"{name}: {cur:.0f}us > {factor:g}x "
+                            f"baseline {base:.0f}us (+{SLACK_US:g}us slack)")
+    for f in failures:
+        print(f"REGRESSION {f}")
+    print(f"# checked {len(set(current) & set(baseline))} entries against "
+          f"{baseline_path.name}, {len(failures)} over {factor:g}x")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help=f"CI tier: m up to {QUICK_SWEEP[-1]} only")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT,
+                    help=f"output JSON (default {DEFAULT_OUT.name})")
+    ap.add_argument("--check", type=pathlib.Path, default=None,
+                    help="baseline JSON to diff against (shared keys only)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timing repetitions (best-of)")
+    args = ap.parse_args()
+
+    ms = QUICK_SWEEP if args.quick else M_SWEEP
+    reps = args.reps if args.reps is not None else 3
+    results = {k: round(v, 1) for k, v in run_sweep(ms, reps).items()}
+    args.out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {len(results)} entries to {args.out}", file=sys.stderr)
+
+    if args.check is not None:
+        factor = float(os.environ.get("PERF_SMOKE_FACTOR", DEFAULT_FACTOR))
+        return check_regressions(results, args.check, factor)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

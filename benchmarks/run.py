@@ -1,7 +1,11 @@
 """Benchmark harness — one section per paper table/figure plus the dry-run /
-roofline reports.  Prints ``name,us_per_call,derived`` CSV rows.
+roofline reports.  Prints ``name,us_per_call,derived`` CSV rows; ``--json``
+additionally writes them as ``{name: {"us_per_call": ..., "derived": ...}}``
+(the scaling sweep in ``benchmarks/analysis_scale.py`` uses the same row
+helper and emits the flat ``BENCH_4.json`` the CI perf-smoke job diffs).
 
     PYTHONPATH=src python -m benchmarks.run [--st-scale 1.0] [--skip-kernels]
+                                           [--json out.json]
 """
 import argparse
 import json
@@ -13,8 +17,11 @@ import numpy as np
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
+ROWS = {}   # name -> {"us_per_call": float, "derived": str}
+
 
 def row(name: str, us: float, derived: str = "") -> None:
+    ROWS[name] = {"us_per_call": round(us, 1), "derived": derived}
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -160,11 +167,7 @@ def bench_kernels() -> None:
     q = jax.random.normal(key, (B * 4, S, dh), jnp.float32)
     t0 = time.perf_counter()
     got = ops.flash_attention(q, q, q, causal=True, block_q=64, block_k=64,
-                              interpret=True) \
-        if hasattr(ops, "flash_attention") else None
-    from repro.kernels.flash_attention import flash_attention
-    got = flash_attention(q, q, q, causal=True, block_q=64, block_k=64,
-                          interpret=True)
+                              interpret=True)
     us = (time.perf_counter() - t0) * 1e6
     want = ref.flash_attention_ref(q, q, q, causal=True)
     err = float(jnp.max(jnp.abs(got - want)))
@@ -246,6 +249,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--st-scale", type=float, default=1.0)
     ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--json", type=pathlib.Path, default=None,
+                    help="also write the rows to this JSON file")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     bench_st(args.st_scale)
@@ -256,6 +261,9 @@ def main() -> None:
         bench_kernels()
     bench_dryrun()
     bench_roofline()
+    if args.json is not None:
+        args.json.write_text(json.dumps(ROWS, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {len(ROWS)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

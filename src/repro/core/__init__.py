@@ -13,10 +13,12 @@ Programs" (2010).  Pure, deterministic numpy implementations of:
 """
 from .analyzer import (AnalysisReport, AutoAnalyzer, Measurements,
                        PAPER_ATTRIBUTES, RootCauseReport, analyze,
-                       external_root_causes, internal_root_causes)
+                       external_root_causes, fingerprint_arrays,
+                       internal_root_causes)
 from .external import CCRNode, ExternalReport, analyze_external
 from .internal import InternalReport, analyze_internal, attribute_flags, crnm
-from .kmeans import KMeansResult, SEVERITY_NAMES, kmeans_1d, severity_classes
+from .kmeans import (KMeansResult, SEVERITY_NAMES, kmeans_1d,
+                     kmeans_1d_reference, severity_classes)
 from .optics import ClusterResult, cluster, reachability_order
 from .regions import ROOT_ID, Region, RegionTree
 from .roughset import (CoreResult, DecisionTable, discernibility_matrix,
@@ -27,8 +29,8 @@ from .pipeline import (AsyncAnalysisSession, BACKPRESSURE_POLICIES,
 from .policy import (Action, BUILTIN_POLICIES, CollectorQuarantinePolicy,
                      Decision, Policy, PolicyEngine, PolicyLog,
                      RebalancePolicy, ReshardPolicy, make_policies)
-from .session import (AnalysisSession, SessionReport, WindowDiff, WindowEntry,
-                      analyze_window, diff_reports)
+from .session import (AnalysisSession, CACHE_STAGES, SessionReport,
+                      WindowDiff, WindowEntry, analyze_window, diff_reports)
 from .vectors import (canonical_partition, keep_columns, lengths,
                       pairwise_distances, severity_S, zero_columns)
 
@@ -40,10 +42,12 @@ __all__ = [
     "BACKPRESSURE_POLICIES", "PipelineClosed", "AutoAnalyzer", "Measurements",
     "PAPER_ATTRIBUTES", "RootCauseReport", "SessionReport", "WindowDiff",
     "WindowEntry", "analyze", "analyze_window", "diff_reports",
-    "external_root_causes", "internal_root_causes", "CCRNode", "ExternalReport",
+    "external_root_causes", "fingerprint_arrays", "internal_root_causes",
+    "CACHE_STAGES", "CCRNode", "ExternalReport",
     "analyze_external", "InternalReport", "analyze_internal",
     "attribute_flags", "crnm", "KMeansResult", "SEVERITY_NAMES", "kmeans_1d",
-    "severity_classes", "ClusterResult", "cluster", "reachability_order",
+    "kmeans_1d_reference", "severity_classes", "ClusterResult", "cluster",
+    "reachability_order",
     "ROOT_ID", "Region", "RegionTree", "CoreResult", "DecisionTable",
     "discernibility_matrix", "extract_core", "external_decision_table",
     "internal_decision_table", "root_causes", "canonical_partition",

@@ -20,11 +20,19 @@ from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .optics import ClusterResult, cluster
+from .optics import (ClusterResult, cluster, cluster_eps, cluster_labels,
+                     labels_to_result, reachability_graph)
 from .regions import RegionTree
-from .vectors import as_matrix, keep_columns, severity_S
+from .vectors import as_matrix, iter_sqdistance_blocks, keep_columns, severity_S
 
 MAX_COMPOSITE_COMBOS = 4096  # safety cap for Step 5 enumeration
+
+# The search fast path keeps three r x r float64 buffers (the squared
+# distances, a per-column difference scratch, and the downdate target) alive
+# across its O(regions) re-clusterings; above this budget it falls back to
+# per-call blocked GEMMs (plain `cluster`), trading speed for the row-wise
+# memory bound.
+FAST_PATH_MAX_BYTES = 512 * 2 ** 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +69,30 @@ class ExternalReport:
 
 
 class ExternalAnalyzer:
-    """Runs the paper's §3.2 algorithm against a RegionTree + perf matrix."""
+    """Runs the paper's §3.2 algorithm against a RegionTree + perf matrix.
+
+    The top-down CCR search re-clusters the same m processes O(regions)
+    times, each time with a different set of region columns zeroed out.
+    The default-``cluster`` path exploits two structural facts instead of
+    paying a fresh m x m GEMM per re-clustering:
+
+    * SPMD pod snapshots carry many bit-identical rows (equal shards,
+      simulated ranks, gap-filled hosts).  Identical rows have identical
+      neighbourhoods under every column subset, so they are collapsed to
+      one weighted point each; clustering runs over the r distinct rows
+      (``cluster_labels(weights=...)``) and labels are expanded back to
+      ranks.
+    * Zeroing columns only *removes* additive ``(x_i - x_j)^2`` terms from
+      every squared distance, so the full squared-distance matrix is
+      materialized once and *downdated* per call with the dropped columns'
+      per-column squared differences.
+
+    A custom ``cluster_fn`` — or a matrix whose buffers would exceed
+    ``FAST_PATH_MAX_BYTES`` — uses the plain per-call path.  The fast path
+    can differ from per-call blocked GEMMs in the last ulp of a distance
+    (different accumulation orders), far below the 10%-of-norm eps margins;
+    the strict bit-identical contract lives on ``cluster`` itself.
+    """
 
     def __init__(self, tree: RegionTree, perf_inclusive,
                  cluster_fn: Callable[[np.ndarray], ClusterResult] = cluster):
@@ -72,6 +103,9 @@ class ExternalAnalyzer:
                 f"perf has {self.perf.shape[1]} columns but tree has {len(tree)} regions")
         self.cluster_fn = cluster_fn
         self._col: Dict[int, int] = {rid: c for c, rid in enumerate(tree.ids())}
+        m, n = self.perf.shape
+        self._fast = cluster_fn is cluster and n >= 1
+        self._d2_full: Optional[np.ndarray] = None   # lazy fast-path buffers
 
     # -- column helpers ----------------------------------------------------
     def _cols(self, rids: Sequence[int]) -> List[int]:
@@ -84,10 +118,113 @@ class ExternalAnalyzer:
         """Paper Step 2 guard: only regions with some nonzero time count."""
         return bool(np.any(self.perf[:, self._col[rid]] > 0))
 
+    # -- clustering fast path ----------------------------------------------
+    def _ensure_fast_buffers(self) -> bool:
+        """Collapse duplicate rows and materialize the squared-distance
+        matrix of the distinct rows.  Returns False (and disables the fast
+        path) when the buffers would blow the memory budget."""
+        if self._d2_full is not None:
+            return True
+        X = self.perf
+        m = X.shape[0]
+        if m == 0:
+            self._fast = False
+            return False
+        # group bit-identical rows; representative = smallest member rank
+        sort = np.lexsort(X.T[::-1])
+        Xs = X[sort]
+        boundary = np.empty(m, dtype=bool)
+        boundary[0] = True
+        np.any(Xs[1:] != Xs[:-1], axis=1, out=boundary[1:])
+        gid_sorted = np.cumsum(boundary) - 1
+        gid = np.empty(m, dtype=np.int64)
+        gid[sort] = gid_sorted
+        r = int(gid_sorted[-1]) + 1
+        first = np.full(r, m, dtype=np.int64)
+        np.minimum.at(first, gid, np.arange(m))
+        # relabel groups in representative-rank order so group index order
+        # is anchor rank order (what the sequential expansion visits)
+        relabel = np.empty(r, dtype=np.int64)
+        relabel[np.argsort(first, kind="stable")] = np.arange(r)
+        self._gid = relabel[gid]
+        reps = np.sort(first)               # rank of each group's first member
+        if 3 * 8 * r * r > FAST_PATH_MAX_BYTES:
+            self._fast = False
+            return False
+        self._weights = np.bincount(self._gid).astype(np.float64)
+        self._X = X[reps]                   # (r, n) distinct rows
+        self._colsq = self._X * self._X
+        self._sq_full = np.sum(self._colsq, axis=1)
+        self._d2_full = np.empty((r, r))
+        for start, stop, blk in iter_sqdistance_blocks(self._X):
+            self._d2_full[start:stop] = blk
+        self._diff = np.empty((r, r))
+        self._work = np.empty((r, r))
+        return True
+
+    def _cluster_live(self, live_rids: Sequence[int]) -> ClusterResult:
+        """Cluster with only ``live_rids``'s columns contributing."""
+        if not self._fast or not self._ensure_fast_buffers():
+            return self.cluster_fn(self._vectors(live_rids))
+        n = self.perf.shape[1]
+        r = self._X.shape[0]
+        keep = set(self._cols(live_rids))
+        dropped = [c for c in range(n) if c not in keep]
+        d2 = sq = None
+        if not dropped:
+            d2, sq = self._d2_full, self._sq_full
+        elif len(dropped) <= len(keep):
+            # downdate: subtract each dropped column's squared differences
+            d2, sq = self._work, self._sq_full.copy()
+            for pos, c in enumerate(dropped):
+                col = self._X[:, c]
+                np.subtract(col[:, None], col[None, :], out=self._diff)
+                np.square(self._diff, out=self._diff)
+                if pos == 0:
+                    np.subtract(self._d2_full, self._diff, out=d2)
+                else:
+                    d2 -= self._diff
+                sq -= self._colsq[:, c]
+            # cancellation can leave tiny negatives; and when a row's kept
+            # mass is vanishingly small next to what was subtracted, the
+            # leftover junk can exceed that row's eps^2 entirely — rebuild
+            # those (rare) calls exactly instead
+            np.maximum(sq, 0.0, out=sq)
+            if bool(np.any(sq * 1e11 < self._sq_full)):
+                d2 = sq = None
+        if d2 is None:
+            # few live columns, or a downdate too cancellation-prone:
+            # rebuild from scratch (still at group level)
+            live = keep_columns(self._X, sorted(keep))
+            d2 = self._work
+            for start, stop, blk in iter_sqdistance_blocks(live):
+                d2[start:stop] = blk
+            sq = np.sum(live * live, axis=1)
+        eps = cluster_eps(np.sqrt(sq))
+        reach = reachability_graph([(0, r, d2)], eps, exact=False)
+        glabels = cluster_labels(reach, weights=self._weights)
+        return labels_to_result(glabels[self._gid])
+
+    def _severity(self) -> float:
+        """Paper Eq. 2 from the group-level buffers when available (pairs
+        within a duplicate group have distance 0, so the max lives on the
+        distinct-row matrix and the min norm on the distinct rows)."""
+        m = self.perf.shape[0]
+        if m < 2:
+            return 0.0
+        if not self._fast or not self._ensure_fast_buffers():
+            return severity_S(self.perf)
+        max_dist = float(np.sqrt(max(0.0, float(np.max(self._d2_full)))))
+        ln = np.sqrt(self._sq_full)
+        min_len = float(np.min(ln))
+        if min_len <= 0.0:
+            min_len = float(np.dot(self._weights, ln) / m) or 1.0
+        return max_dist / min_len
+
     # -- main entry ---------------------------------------------------------
     def analyze(self) -> ExternalReport:
-        base = self.cluster_fn(self.perf)
-        S = severity_S(self.perf)
+        base = self._cluster_live(list(self._col))
+        S = self._severity()
         if base.n_clusters <= 1:
             return ExternalReport(False, S, base, (), ())
 
@@ -95,7 +232,7 @@ class ExternalAnalyzer:
         cccrs: List[int] = []
 
         level1 = [r for r in self.tree.at_depth(1) if self._active(r)]
-        ref = self.cluster_fn(self._vectors(level1))
+        ref = self._cluster_live(level1)
         one_ccrs = self._find_level1_ccrs(level1, ref)
 
         if one_ccrs:
@@ -117,7 +254,7 @@ class ExternalAnalyzer:
                           ref: ClusterResult) -> List[int]:
         found = []
         for rid in level1:
-            test = self.cluster_fn(self._vectors([r for r in level1 if r != rid]))
+            test = self._cluster_live([r for r in level1 if r != rid])
             if not test.same_output(ref):
                 found.append(rid)
         return found
@@ -134,7 +271,7 @@ class ExternalAnalyzer:
             return
         child_ccrs = []
         for k in children:
-            test = self.cluster_fn(self._vectors(list(context) + [k]))
+            test = self._cluster_live(list(context) + [k])
             if test.same_output(ref):
                 child_ccrs.append(k)
         if not child_ccrs:
@@ -154,17 +291,17 @@ class ExternalAnalyzer:
                 combos = combos[:MAX_COMPOSITE_COMBOS]
             # composite vectors: each combo contributes the union of its
             # member columns; remaining singles stay as-is.
+            ref = self._cluster_live(list(level1))
             for combo in combos:
                 singles = [x for x in level1 if x not in combo]
-                ref = self.cluster_fn(self._vectors(list(level1)))
                 # drop the whole composite: changed output => composite is 1-CCR
-                test = self.cluster_fn(self._vectors(singles))
+                test = self._cluster_live(singles)
                 if test.same_output(ref):
                     continue
                 # composite region found; descend into each member as a child
                 member_ccrs = []
                 for k in combo:
-                    t2 = self.cluster_fn(self._vectors(singles + [k]))
+                    t2 = self._cluster_live(singles + [k])
                     if t2.same_output(ref):
                         member_ccrs.append(k)
                 if not member_ccrs:

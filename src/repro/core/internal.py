@@ -51,7 +51,14 @@ class InternalReport:
     region_ids: Tuple[int, ...]
 
     def severity_of(self, rid: int) -> int:
-        return self.severity.labels[self.region_ids.index(rid)]
+        i = self.region_ids.index(rid)
+        if i >= len(self.severity.labels):
+            # gated windows (AnalysisSession internal_gate_s) carry an empty
+            # severity stub — no region was classified
+            raise LookupError(
+                f"region {rid} has no severity class: the internal pass was "
+                f"skipped for this window (external gate)")
+        return self.severity.labels[i]
 
     def render(self, tree: Optional[RegionTree] = None) -> str:
         nm = (lambda r: tree.name(r)) if tree is not None else (lambda r: str(r))

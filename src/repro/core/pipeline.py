@@ -63,15 +63,23 @@ class AsyncAnalysisSession:
                  max_queue: int = 8, backpressure: str = BLOCK,
                  on_window: Optional[Callable[[WindowEntry], None]] = None,
                  session: Optional[AnalysisSession] = None,
-                 policy_engine=None):
+                 policy_engine=None, reuse: bool = True,
+                 internal_gate_s: Optional[float] = None):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(f"backpressure must be one of "
                              f"{BACKPRESSURE_POLICIES}, got {backpressure!r}")
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
+        if session is not None and (keep_windows is not None
+                                    or not reuse
+                                    or internal_gate_s is not None):
+            raise ValueError(
+                "session= conflicts with keep_windows/reuse/internal_gate_s "
+                "— configure the AnalysisSession you pass in instead")
         self.tree = tree
         self._session = session if session is not None \
-            else AnalysisSession(tree, keep_windows)
+            else AnalysisSession(tree, keep_windows, reuse=reuse,
+                                 internal_gate_s=internal_gate_s)
         self._max_queue = max_queue
         self._policy = backpressure
         self._on_window = on_window

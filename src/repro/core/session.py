@@ -14,6 +14,19 @@ search, CRNM + internal CCCR search, rough-set root causes);
 reports (clustering results and decision tables ride along inside them), and
 diffs each window against the previous one.  ``report()`` returns the
 cross-window :class:`SessionReport` timeline.
+
+Incremental reuse: consecutive windows of a steady workload often carry the
+*identical* matrices (the paper's Step 2 ``same_output`` observation, and
+exactly what ``--sim-ranks`` style pod simulations produce).  The session
+fingerprints each window's inputs (:func:`~repro.core.analyzer.
+fingerprint_arrays`) and reuses the previous window's external clustering /
+CCR search, severity classification, and rough-set tables for every stage
+whose inputs are unchanged.  Analysis is deterministic, so a cache hit
+returns the same frozen report object recomputation would rebuild —
+``SessionReport.render()`` is byte-identical with reuse on or off, and
+the stages reused are recorded on ``WindowEntry.cache_hits`` /
+``SessionReport.cache_hit_counts()`` so the savings are observable without
+perturbing policy evidence.
 """
 from __future__ import annotations
 
@@ -23,32 +36,131 @@ from typing import Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from .analyzer import (AnalysisReport, Measurements, RootCauseReport,
-                       external_root_causes, internal_root_causes)
+                       external_root_causes, fingerprint_arrays,
+                       internal_root_causes)
 from .external import analyze_external
-from .internal import analyze_internal, crnm
+from .internal import InternalReport, analyze_internal, crnm
+from .kmeans import KMeansResult
 from .regions import RegionTree
 from .roughset import DecisionTable
 from .vectors import as_matrix
 
+#: Cache stages a window can reuse from its predecessor (WindowEntry.cache_hits
+#: values).  "internal_gated" marks a window whose internal pass was skipped
+#: by the external gate, not reused from cache.
+CACHE_STAGES = ("external", "external_root_causes", "internal",
+                "internal_root_causes", "internal_gated")
 
-def analyze_window(tree: RegionTree, measurements: Measurements,
-                   attributes: Mapping[str, np.ndarray]) -> AnalysisReport:
-    """The paper's full single-window pipeline (§4 driver)."""
+
+def _checked_attrs(measurements: Measurements,
+                   attributes: Mapping[str, np.ndarray]
+                   ) -> Dict[str, np.ndarray]:
     attrs = {k: as_matrix(v) for k, v in attributes.items()}
     m, n = as_matrix(measurements.cpu_time).shape
     for k, v in attrs.items():
         if v.shape != (m, n):
             raise ValueError(f"attribute {k} shape {v.shape} != {(m, n)}")
-    ext = analyze_external(tree, measurements.cpu_time)
-    cm = crnm(measurements.wall_time, measurements.program_wall,
-              measurements.cycles, measurements.instructions)
-    internal = analyze_internal(tree, cm)
-    return AnalysisReport(
-        external=ext,
-        internal=internal,
-        external_root_causes=external_root_causes(tree, attrs, ext),
-        internal_root_causes=internal_root_causes(tree, attrs, internal),
-    )
+    return attrs
+
+
+def analyze_window(tree: RegionTree, measurements: Measurements,
+                   attributes: Mapping[str, np.ndarray]) -> AnalysisReport:
+    """The paper's full single-window pipeline (§4 driver)."""
+    report, _, _ = _analyze_window_cached(tree, measurements, attributes,
+                                          memo=None, internal_gate_s=None,
+                                          keep_memo=False)
+    return report
+
+
+@dataclasses.dataclass(frozen=True)
+class _WindowMemo:
+    """Input fingerprints + report of the previously analyzed window."""
+    fp_cpu: bytes              # cpu_time matrix (external stage input)
+    fp_internal: bytes         # wall/program_wall/cycles/instructions
+    fp_attrs: bytes            # attribute name -> matrix mapping
+    internal_gated: bool       # report.internal is the gate's empty stub
+    report: AnalysisReport
+
+
+def _fingerprint_attrs(attrs: Mapping[str, np.ndarray]) -> bytes:
+    names = sorted(attrs)
+    return fingerprint_arrays(*(attrs[k] for k in names),
+                              salt="\x00".join(names))
+
+
+def _gated_internal(tree: RegionTree) -> InternalReport:
+    """Empty internal report for a window the external gate disposed of
+    (single cluster, S below threshold): no severity classes, no CCCRs."""
+    return InternalReport(crnm_mean=(), severity=KMeansResult((), ()),
+                          ccrs=(), cccrs=(), region_ids=tree.ids())
+
+
+def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
+                           attributes: Mapping[str, np.ndarray],
+                           memo: Optional[_WindowMemo],
+                           internal_gate_s: Optional[float],
+                           keep_memo: bool = True
+                           ) -> Tuple[AnalysisReport, Tuple[str, ...],
+                                      Optional[_WindowMemo]]:
+    """Single-window pipeline with stage-level reuse against ``memo``.
+
+    Every stage whose exact inputs match the previous window's fingerprints
+    reuses the previous frozen result; analysis is deterministic, so the
+    report is identical to an uncached run.  Returns
+    ``(report, cache_hits, new_memo)``; with ``keep_memo=False`` (one-shot
+    callers, reuse disabled) the input hashing is skipped entirely and
+    ``new_memo`` is None.
+    """
+    attrs = _checked_attrs(measurements, attributes)
+    if memo is not None or keep_memo:
+        fp_cpu = fingerprint_arrays(measurements.cpu_time)
+        fp_internal = fingerprint_arrays(
+            measurements.wall_time, measurements.program_wall,
+            measurements.cycles, measurements.instructions)
+        fp_attrs = _fingerprint_attrs(attrs)
+    else:
+        fp_cpu = fp_internal = fp_attrs = b""
+    hits: List[str] = []
+
+    if memo is not None and fp_cpu == memo.fp_cpu:
+        ext = memo.report.external
+        hits.append("external")
+        if fp_attrs == memo.fp_attrs:
+            ext_rc = memo.report.external_root_causes
+            hits.append("external_root_causes")
+        else:
+            ext_rc = external_root_causes(tree, attrs, ext)
+    else:
+        ext = analyze_external(tree, measurements.cpu_time)
+        ext_rc = external_root_causes(tree, attrs, ext)
+
+    gated = (internal_gate_s is not None and not ext.exists
+             and ext.severity < internal_gate_s)
+    if gated:
+        internal = _gated_internal(tree)
+        int_rc: Optional[RootCauseReport] = None
+        hits.append("internal_gated")
+    elif (memo is not None and fp_internal == memo.fp_internal
+            and not memo.internal_gated):
+        internal = memo.report.internal
+        hits.append("internal")
+        if fp_attrs == memo.fp_attrs:
+            int_rc = memo.report.internal_root_causes
+            hits.append("internal_root_causes")
+        else:
+            int_rc = internal_root_causes(tree, attrs, internal)
+    else:
+        cm = crnm(measurements.wall_time, measurements.program_wall,
+                  measurements.cycles, measurements.instructions)
+        internal = analyze_internal(tree, cm)
+        int_rc = internal_root_causes(tree, attrs, internal)
+
+    report = AnalysisReport(external=ext, internal=internal,
+                            external_root_causes=ext_rc,
+                            internal_root_causes=int_rc)
+    new_memo = _WindowMemo(fp_cpu, fp_internal, fp_attrs, gated, report) \
+        if keep_memo else None
+    return report, tuple(hits), new_memo
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +216,12 @@ class WindowEntry:
 
     The verdict accessors below are the *stable keys policies observe*:
     their names and semantics are part of the public API
-    (see ``docs/policies.md``)."""
+    (see ``docs/policies.md``).
+
+    ``cache_hits`` lists the analysis stages reused from the previous
+    window's memo (values from :data:`CACHE_STAGES`); it is bookkeeping
+    only — a reused stage holds the identical frozen objects recomputation
+    would produce, so policy evidence is unaffected."""
 
     index: int
     label: Optional[str]
@@ -112,6 +229,7 @@ class WindowEntry:
     diff: WindowDiff
     gap_ranks: Tuple[int, ...] = ()
     rank_cpu: Tuple[float, ...] = ()
+    cache_hits: Tuple[str, ...] = ()
 
     @property
     def clustering(self):
@@ -169,6 +287,16 @@ class SessionReport:
         tl = self.bottleneck_timeline().get(rid)
         return tl[0] if tl else None
 
+    def cache_hit_counts(self) -> Dict[str, int]:
+        """stage name -> number of windows that reused it (see
+        :data:`CACHE_STAGES`); empty when incremental reuse never fired.
+        Purely observational — reports are identical with caching off."""
+        out: Dict[str, int] = {}
+        for w in self.windows:
+            for stage in w.cache_hits:
+                out[stage] = out.get(stage, 0) + 1
+        return out
+
     def render(self, tree: Optional[RegionTree] = None) -> str:
         nm = (lambda r: tree.name(r)) if tree is not None else (lambda r: f"region {r}")
         lines = [f"=== analysis session: {len(self.windows)} window(s) ==="]
@@ -206,12 +334,26 @@ class AnalysisSession:
     are assigned monotonically from 0; analysis is deterministic, so two
     sessions fed the same snapshot stream produce byte-identical
     ``report().render()`` output (this is what lets the async pipeline and
-    any attached policy engine mirror the synchronous path exactly).  Not
-    thread-safe — one ingesting thread per session."""
+    any attached policy engine mirror the synchronous path exactly) —
+    including with incremental ``reuse``, which only ever substitutes a
+    previous window's frozen results for stages whose fingerprinted inputs
+    are unchanged.  Not thread-safe — one ingesting thread per session.
 
-    def __init__(self, tree: RegionTree, keep_windows: Optional[int] = None):
+    ``internal_gate_s`` (off by default) skips the internal pass entirely
+    for windows the external gate already disposes of — a single cluster
+    with severity ``S`` below the threshold; such windows carry an empty
+    internal report and are marked ``internal_gated`` in ``cache_hits``.
+    Enabling the gate changes reports (internal CCCRs are not computed for
+    healthy windows), so it is an explicit opt-in for high-rate pods."""
+
+    def __init__(self, tree: RegionTree, keep_windows: Optional[int] = None,
+                 *, reuse: bool = True,
+                 internal_gate_s: Optional[float] = None):
         self.tree = tree
         self.keep_windows = keep_windows
+        self.reuse = reuse
+        self.internal_gate_s = internal_gate_s
+        self._memo: Optional[_WindowMemo] = None
         self._entries: List[WindowEntry] = []
         self._next_index = 0
 
@@ -234,14 +376,20 @@ class AnalysisSession:
         """Analyze one window of raw matrices and append it to the timeline.
         ``gap_ranks`` marks ranks whose rows are zero-filled placeholders
         (missing hosts in a merged pod view)."""
-        report = analyze_window(self.tree, measurements, attributes)
+        report, hits, memo = _analyze_window_cached(
+            self.tree, measurements, attributes,
+            memo=self._memo if self.reuse else None,
+            internal_gate_s=self.internal_gate_s, keep_memo=self.reuse)
+        if self.reuse:
+            self._memo = memo
         prev = self._entries[-1].report if self._entries else None
         rank_cpu = tuple(float(x) for x in
                          as_matrix(measurements.cpu_time).sum(axis=1))
         entry = WindowEntry(self._next_index, label, report,
                             diff_reports(prev, report),
                             gap_ranks=tuple(int(r) for r in gap_ranks),
-                            rank_cpu=rank_cpu)
+                            rank_cpu=rank_cpu,
+                            cache_hits=hits)
         self._next_index += 1
         self._entries.append(entry)
         if self.keep_windows is not None and len(self._entries) > self.keep_windows:

@@ -10,9 +10,15 @@ Column order follows ``RegionTree.ids()``.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
+
+# Row-wise memory bound for blocked pairwise-distance computation: one block
+# of the distance matrix never exceeds this many bytes of float64 (the m x m
+# matrix for m=4096 would be 128 MiB; blocks keep the analysis thread's
+# footprint flat no matter how many ranks a merged pod snapshot carries).
+DIST_BLOCK_BYTES = 32 * 2 ** 20
 
 
 def as_matrix(perf) -> np.ndarray:
@@ -30,6 +36,53 @@ def pairwise_distances(perf: np.ndarray) -> np.ndarray:
     return np.sqrt(np.maximum(d2, 0.0))
 
 
+def iter_sqdistance_blocks(perf: np.ndarray,
+                           block_rows: Optional[int] = None
+                           ) -> Iterator[Tuple[int, int, np.ndarray]]:
+    """Yield the *squared* distance matrix in row blocks
+    ``(start, stop, d2_block)``.
+
+    ``d2_block`` holds exactly the same floats as the intermediate ``d2``
+    inside :func:`pairwise_distances` — same expression, same evaluation
+    order — so ``sqrt(max(d2_block, 0))`` is bit-identical to the distances
+    (IEEE sqrt is correctly rounded).  Entries may be tiny negatives from
+    cancellation; consumers comparing against positive thresholds need no
+    clamp, and skipping the m x m clamp + sqrt is the main win for the
+    clustering hot path, which only ever *compares* distances.
+
+    The default block height keeps each block under ``DIST_BLOCK_BYTES``
+    (the row-wise memory bound: one block of float64, never the full m x m
+    matrix).  For matrices that fit in a single block the underlying GEMM is
+    the same call the reference implementation makes; for larger matrices
+    the per-block GEMM may differ from the full-matrix one in the last ulp
+    (BLAS blocking), which is far below the eps margins at that scale.
+    """
+    perf = as_matrix(perf)
+    m = perf.shape[0]
+    if m == 0:
+        return
+    if block_rows is None:
+        block_rows = max(1, DIST_BLOCK_BYTES // max(8 * m, 8))
+    sq = np.sum(perf * perf, axis=1)
+    pt = perf.T
+    for start in range(0, m, block_rows):
+        stop = min(start + block_rows, m)
+        d2 = sq[start:stop, None] + sq[None, :]
+        d2 -= 2.0 * (perf[start:stop] @ pt)
+        yield start, stop, d2
+
+
+def iter_distance_blocks(perf: np.ndarray,
+                         block_rows: Optional[int] = None
+                         ) -> Iterator[Tuple[int, int, np.ndarray]]:
+    """Yield the distance matrix in row blocks ``(start, stop, dist_block)``;
+    rows ``start:stop`` of :func:`pairwise_distances` under the same memory
+    bound as :func:`iter_sqdistance_blocks`."""
+    for start, stop, d2 in iter_sqdistance_blocks(perf, block_rows):
+        np.maximum(d2, 0.0, out=d2)
+        yield start, stop, np.sqrt(d2)
+
+
 def lengths(perf: np.ndarray) -> np.ndarray:
     """Vector norms len_i (paper Eq. 3)."""
     return np.sqrt(np.sum(as_matrix(perf) ** 2, axis=1))
@@ -44,14 +97,19 @@ def severity_S(perf: np.ndarray) -> float:
     perf = as_matrix(perf)
     if perf.shape[0] < 2:
         return 0.0
-    dist = pairwise_distances(perf)
+    # max of sqrt == sqrt of max (correctly-rounded sqrt is monotone), so the
+    # elementwise m x m sqrt of the reference expression is not needed.
+    max_d2 = 0.0   # the clamp of pairwise_distances, applied to the scalar
+    for _, _, blk in iter_sqdistance_blocks(perf):
+        max_d2 = max(max_d2, float(np.max(blk)))
+    max_dist = float(np.sqrt(max_d2))
     ln = lengths(perf)
     min_len = float(np.min(ln))
     if min_len <= 0.0:
         # Degenerate: some process did no measured work.  Fall back to the
         # mean norm so S stays finite (the clustering still flags the outlier).
         min_len = float(np.mean(ln)) or 1.0
-    return float(np.max(dist)) / min_len
+    return max_dist / min_len
 
 
 def zero_columns(perf: np.ndarray, cols: Sequence[int]) -> np.ndarray:

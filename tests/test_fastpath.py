@@ -1,0 +1,357 @@
+"""The analysis fast path must be invisible: vectorized clustering, the
+monotone-argmin k-means DP, blocked distances, the search fast path, and
+incremental session reuse all have to produce the same results as the
+retained reference implementations / uncached paths — on random matrices
+and on the degenerate shapes pods actually produce (all-zero rows, fewer
+distinct values than k, huge spreads, m=1, duplicate-heavy rows)."""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade property tests to fixed-seed example sweeps
+    from _hypo import given, settings, st
+
+from repro.core import (AnalysisSession, Measurements, RegionTree,
+                        analyze_external, cluster, kmeans_1d,
+                        kmeans_1d_reference, reachability_order)
+from repro.core._reference import (cluster_reference,
+                                   optimal_1d_partition_reference,
+                                   reachability_order_reference)
+from repro.core.kmeans import _dc_layer, _layer1
+from repro.core.vectors import (iter_distance_blocks, iter_sqdistance_blocks,
+                                lengths, pairwise_distances, severity_S)
+
+
+def random_perf(rng, m, n, kind):
+    """The matrix shapes the clustering sees in production."""
+    if kind == 0:        # plain random
+        return rng.uniform(0, 100, (m, n))
+    if kind == 1:        # duplicate-heavy (merged pod: equal shards)
+        g = int(rng.integers(1, max(2, m // 2 + 1)))
+        rows = rng.uniform(0, 50, (g, n))
+        return rows[rng.integers(0, g, m)]
+    if kind == 2:        # all-zero rows mixed in (gap-masked hosts)
+        perf = rng.uniform(0, 10, (m, n))
+        perf[rng.random(m) < 0.3] = 0.0
+        return perf
+    if kind == 3:        # tight jitter around one point (healthy pod)
+        return 100.0 + 0.01 * rng.standard_normal((m, n))
+    return 10.0 ** rng.uniform(-6, 6, (m, n))   # NaN-free large spreads
+
+
+# ---------------------------------------------------------------------------
+# clustering: vectorized vs reference
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=120, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 8), st.integers(0, 4),
+       st.integers(0, 99999))
+def test_cluster_matches_reference(m, n, kind, seed):
+    rng = np.random.default_rng(seed)
+    perf = random_perf(rng, m, n, kind)
+    assert cluster(perf) == cluster_reference(perf)
+
+
+def test_cluster_matches_reference_degenerate():
+    for perf in (np.zeros((5, 3)),            # all-zero matrix
+                 np.zeros((1, 4)),            # m=1
+                 np.ones((2, 1)),             # m=2 identical
+                 np.array([[1e-300, 0.0], [0.0, 1e-300]]),
+                 np.tile([3.0, 4.0], (17, 1))):
+        assert cluster(perf) == cluster_reference(perf)
+    assert cluster(np.empty((0, 3))) == cluster_reference(np.empty((0, 3)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 6), st.integers(0, 4),
+       st.integers(0, 99999))
+def test_reachability_order_matches_reference(m, n, kind, seed):
+    rng = np.random.default_rng(seed)
+    perf = random_perf(rng, m, n, kind)
+    assert reachability_order(perf) == reachability_order_reference(perf)
+
+
+# ---------------------------------------------------------------------------
+# k-means: dense / divide-and-conquer DP vs reference DP
+# ---------------------------------------------------------------------------
+
+def random_values(rng, n, kind):
+    if kind == 0:
+        return rng.uniform(0, 50, n)
+    if kind == 1:        # tie-heavy: few distinct values, many duplicates
+        return rng.choice([0.0, 1.0, 2.0], n)
+    if kind == 2:        # < k distinct values
+        return rng.integers(0, 4, n).astype(float)
+    if kind == 3:        # constant
+        return np.full(n, float(rng.uniform(0, 9)))
+    return 10.0 ** rng.uniform(-8, 8, n)        # NaN-free large spreads
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.integers(1, 48), st.integers(2, 7), st.integers(0, 4),
+       st.integers(0, 99999))
+def test_kmeans_matches_reference(n, k, kind, seed):
+    rng = np.random.default_rng(seed)
+    vals = random_values(rng, n, kind)
+    assert kmeans_1d(vals, k=k) == kmeans_1d_reference(vals, k=k)
+
+
+def test_kmeans_empty_and_m1():
+    assert kmeans_1d([]) == kmeans_1d_reference([])
+    assert kmeans_1d([3.5]) == kmeans_1d_reference([3.5])
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(2, 90), st.integers(2, 6), st.booleans(),
+       st.integers(0, 99999))
+def test_dc_layers_match_reference_dp(n, k, spread, seed):
+    """Force the divide-and-conquer path on its production precondition —
+    all-distinct sorted values (duplicates are routed to the dense layer,
+    see ``_optimal_1d_partition``) — and compare full backtracked labels
+    to the reference DP."""
+    rng = np.random.default_rng(seed)
+    sv = np.unique(10.0 ** rng.uniform(-8, 8, n) if spread
+                   else rng.uniform(0, 50, n))
+    n = len(sv)
+    if n < 2:
+        return
+    k = min(k, n)
+    pre = np.concatenate([[0.0], np.cumsum(sv)])
+    pre2 = np.concatenate([[0.0], np.cumsum(sv ** 2)])
+    d_prev = _layer1(pre, pre2, n)
+    args = [np.zeros(n + 1, dtype=np.int64)]
+    for m in range(2, k + 1):
+        d_prev, arg_m = _dc_layer(pre, pre2, d_prev, m, n)
+        args.append(arg_m)
+    labels = np.zeros(n, dtype=np.int64)
+    i = n
+    for m in range(k, 1, -1):
+        j = int(args[m - 1][i])
+        labels[j:i] = m - 1
+        i = j
+    assert np.array_equal(labels, optimal_1d_partition_reference(sv, k))
+
+
+def test_kmeans_large_n_uses_dc_and_matches():
+    """Above the dense threshold all-distinct inputs take the D&C path."""
+    rng = np.random.default_rng(7)
+    vals = rng.uniform(0, 20, 700)
+    assert len(np.unique(vals)) == len(vals)
+    assert kmeans_1d(vals) == kmeans_1d_reference(vals)
+
+
+def test_kmeans_large_n_duplicates_fall_back_exactly():
+    """Duplicate-heavy large inputs are routed to the dense layer (exact
+    on ties) and still match the reference bit for bit."""
+    rng = np.random.default_rng(8)
+    vals = np.round(rng.uniform(0, 20, 700), 1)
+    assert kmeans_1d(vals) == kmeans_1d_reference(vals)
+
+
+# ---------------------------------------------------------------------------
+# blocked distances
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 6), st.integers(1, 45),
+       st.integers(0, 99999))
+def test_blocked_distances_match_full(m, n, block_rows, seed):
+    rng = np.random.default_rng(seed)
+    perf = rng.uniform(0, 10, (m, n))
+    full = pairwise_distances(perf)
+    got = np.vstack([blk for _, _, blk in
+                     iter_distance_blocks(perf, block_rows)])
+    # multi-row-block GEMMs may differ from the full one in the last ulp;
+    # bound the error relative to the vector norms (eps margins are 10%)
+    tol = 1e-6 * max(float(np.max(lengths(perf))), 1e-30)
+    assert got.shape == full.shape
+    assert np.allclose(got, full, rtol=1e-9, atol=tol)
+
+
+def test_single_block_is_bitwise_exact():
+    """A matrix that fits one block (the default for m <= ~2000) must go
+    through the exact same expression as pairwise_distances."""
+    rng = np.random.default_rng(3)
+    perf = rng.uniform(0, 10, (37, 5))
+    (_, _, d2), = iter_sqdistance_blocks(perf)   # one block
+    assert np.array_equal(np.sqrt(np.maximum(d2, 0.0)),
+                          pairwise_distances(perf))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 6), st.integers(0, 4),
+       st.integers(0, 99999))
+def test_severity_matches_naive(m, n, kind, seed):
+    rng = np.random.default_rng(seed)
+    perf = random_perf(rng, m, n, kind)
+    dist = pairwise_distances(perf)
+    ln = lengths(perf)
+    min_len = float(np.min(ln))
+    if min_len <= 0.0:
+        min_len = float(np.mean(ln)) or 1.0
+    assert severity_S(perf) == float(np.max(dist)) / min_len
+
+
+# ---------------------------------------------------------------------------
+# ExternalAnalyzer fast path (duplicate collapse + distance downdating)
+# ---------------------------------------------------------------------------
+
+def chain_tree(n):
+    tree = RegionTree()
+    for i in range(1, n + 1):
+        tree.add(f"r{i}", rid=i)
+    return tree
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 14), st.integers(2, 6), st.integers(0, 2),
+       st.integers(0, 99999))
+def test_external_fast_path_matches_plain_cluster_fn(m, n, kind, seed):
+    """The search with its buffer-reuse fast path must report the same
+    CCRs/CCCRs/severity as the same search forced onto plain per-call
+    clustering (``cluster_fn=`` disables the fast path)."""
+    rng = np.random.default_rng(seed)
+    tree = chain_tree(n)
+    perf = random_perf(rng, m, n, kind)
+    fast = analyze_external(tree, perf)
+    slow = analyze_external(tree, perf, cluster_fn=lambda p: cluster(p))
+    assert fast.cccrs == slow.cccrs
+    assert fast.ccrs == slow.ccrs
+    assert fast.clustering == slow.clustering
+    assert fast.severity == pytest.approx(slow.severity, rel=1e-9, abs=1e-12)
+
+
+def test_external_fast_path_pod_shape():
+    """Tiled pod matrix with a slow block: the fast path must localize the
+    same region and collapse duplicates while doing it."""
+    tree = chain_tree(8)
+    rng = np.random.default_rng(0)
+    perf = np.tile(rng.uniform(5, 10, 8), (64, 1))
+    perf[:8, 3] *= 3.0
+    fast = analyze_external(tree, perf)
+    slow = analyze_external(tree, perf, cluster_fn=lambda p: cluster(p))
+    assert fast.exists and fast.cccrs == slow.cccrs == (4,)
+    assert fast.clustering == slow.clustering
+
+
+# ---------------------------------------------------------------------------
+# incremental session reuse
+# ---------------------------------------------------------------------------
+
+def make_window(tree, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    m, n = 5, len(tree)
+    cpu = rng.uniform(1, 5, (m, n)) * scale
+    wall = cpu * 1.1
+    meas = Measurements(cpu, wall, wall.sum(axis=1),
+                        rng.uniform(1e6, 5e6, (m, n)),
+                        rng.uniform(1e6, 2e6, (m, n)))
+    attrs = {"l1_miss_rate": rng.uniform(0, 1, (m, n)),
+             "network_io": rng.uniform(0, 1, (m, n))}
+    return meas, attrs
+
+
+def test_session_reuse_render_byte_identical():
+    """A multi-window timeline with repeats renders byte-identically with
+    and without caching, and the cached run reports its hits."""
+    tree = chain_tree(6)
+    timeline = [make_window(tree, 1), make_window(tree, 1),
+                make_window(tree, 2), make_window(tree, 2),
+                make_window(tree, 2), make_window(tree, 1),
+                make_window(tree, 3, scale=4.0)]
+    cached = AnalysisSession(tree)
+    plain = AnalysisSession(tree, reuse=False)
+    for meas, attrs in timeline:
+        cached.ingest(meas, attrs)
+        plain.ingest(meas, attrs)
+    assert cached.report().render(tree) == plain.report().render(tree)
+    hits = cached.report().cache_hit_counts()
+    assert hits.get("external", 0) >= 3          # windows 1, 3, 4
+    assert hits.get("internal", 0) >= 3
+    assert hits.get("external_root_causes", 0) >= 3
+    assert plain.report().cache_hit_counts() == {}
+
+
+def test_session_reuse_partial_hit():
+    """Same cpu matrix but different attributes: the clustering is reused,
+    the rough-set tables are recomputed (and match a cold run)."""
+    tree = chain_tree(5)
+    meas, attrs = make_window(tree, 11)
+    _, attrs2 = make_window(tree, 12)
+    s = AnalysisSession(tree)
+    s.ingest(meas, attrs)
+    e = s.ingest(meas, attrs2)
+    assert "external" in e.cache_hits
+    assert "external_root_causes" not in e.cache_hits
+    cold = AnalysisSession(tree, reuse=False)
+    cold.ingest(meas, attrs)
+    e_cold = cold.ingest(meas, attrs2)
+    assert e.report.render(tree) == e_cold.report.render(tree)
+
+
+def test_internal_gate_skips_internal_pass():
+    """Healthy window (one cluster, tiny S): the opt-in gate empties the
+    internal report and marks the entry; an identical unhealthy window
+    after the gate window must not reuse the gated stub."""
+    tree = chain_tree(4)
+    m, n = 6, 4
+    cpu = np.tile(np.linspace(1, 4, n), (m, 1))
+    meas = Measurements(cpu, cpu * 1.1, (cpu * 1.1).sum(axis=1),
+                        np.full((m, n), 2e6), np.full((m, n), 1e6))
+    attrs = {"instructions": np.ones((m, n))}
+    gated = AnalysisSession(tree, internal_gate_s=0.05)
+    e = gated.ingest(meas, attrs)
+    assert "internal_gated" in e.cache_hits
+    assert e.report.internal.cccrs == ()
+    assert e.report.internal_root_causes is None
+    # ungated session on the same window does find internal structure
+    plain = AnalysisSession(tree)
+    assert plain.ingest(meas, attrs).report.internal.cccrs != ()
+    # same internal matrices, but the gated stub must never be "reused":
+    # make the next window unhealthy externally, keep internal inputs equal
+    cpu2 = cpu.copy()
+    cpu2[0] *= 10.0
+    meas2 = Measurements(cpu2, meas.wall_time, meas.program_wall,
+                         meas.cycles, meas.instructions)
+    e2 = gated.ingest(meas2, attrs)
+    assert "internal_gated" not in e2.cache_hits
+    assert "internal" not in e2.cache_hits        # stub not reusable
+    assert e2.report.internal.cccrs == \
+        plain.ingest(meas2, attrs).report.internal.cccrs
+
+
+def test_async_pipeline_reuse_matches_sync_and_no_reuse():
+    """The async pipeline inherits reuse by default; a steady snapshot
+    stream produces cache hits and the rendered report stays byte-identical
+    to both the sync session and a reuse-disabled pipeline."""
+    from repro.core import AsyncAnalysisSession
+    from repro.perfdbg import RegionRecorder
+    tree = chain_tree(3)
+    rec = RegionRecorder(tree, 4, max_windows=6)
+    for w in range(6):
+        hot = 8.0 if w in (2, 3) else 1.0
+        for r in range(4):
+            for rid in tree.ids():
+                c = hot if rid == 2 else 1.0
+                rec.add(r, rid, cpu_time=c, wall_time=c, cycles=c * 2e9,
+                        instructions=1e9)
+            rec.add_program_wall(r, float(len(tree.ids())))
+        rec.reset_window(f"w{w}")
+    snaps = rec.windows()
+
+    sync = AnalysisSession(tree)
+    for s in snaps:
+        sync.ingest_snapshot(s)
+    with AsyncAnalysisSession(tree) as pipe:
+        for s in snaps:
+            pipe.submit(s)
+        cached_report = pipe.drain()
+    with AsyncAnalysisSession(tree, reuse=False) as pipe:
+        for s in snaps:
+            pipe.submit(s)
+        plain_report = pipe.drain()
+    assert cached_report.render(tree) == sync.report().render(tree)
+    assert cached_report.render(tree) == plain_report.render(tree)
+    # windows 1, 3 and 5 repeat their predecessor's matrices
+    assert cached_report.cache_hit_counts().get("external", 0) >= 2
+    assert plain_report.cache_hit_counts() == {}
