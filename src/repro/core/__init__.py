@@ -21,9 +21,11 @@ from .kmeans import (KMeansResult, SEVERITY_NAMES, kmeans_1d,
                      kmeans_1d_reference, severity_classes)
 from .optics import ClusterResult, cluster, reachability_order
 from .regions import ROOT_ID, Region, RegionTree
-from .roughset import (CoreResult, DecisionTable, discernibility_matrix,
-                       extract_core, external_decision_table,
-                       internal_decision_table, root_causes)
+from .roughset import (ATTRIBUTE_ROLES, CoreResult, DecisionTable,
+                       ROLE_IO, ROLE_MEMORY, ROLE_NETWORK, ROLE_WORK,
+                       discernibility_matrix, extract_core,
+                       external_decision_table, internal_decision_table,
+                       root_causes)
 from .pipeline import (AsyncAnalysisSession, BACKPRESSURE_POLICIES,
                        PipelineClosed)
 from .policy import (Action, BUILTIN_POLICIES, CollectorQuarantinePolicy,
@@ -48,6 +50,7 @@ __all__ = [
     "attribute_flags", "crnm", "KMeansResult", "SEVERITY_NAMES", "kmeans_1d",
     "kmeans_1d_reference", "severity_classes", "ClusterResult", "cluster",
     "reachability_order",
+    "ATTRIBUTE_ROLES", "ROLE_IO", "ROLE_MEMORY", "ROLE_NETWORK", "ROLE_WORK",
     "ROOT_ID", "Region", "RegionTree", "CoreResult", "DecisionTable",
     "discernibility_matrix", "extract_core", "external_decision_table",
     "internal_decision_table", "root_causes", "canonical_partition",

@@ -86,6 +86,23 @@ class RootCauseReport:
     core: CoreResult
     # per-bottleneck attribution: region/process -> attributes flagged for it
     per_entry: Tuple[Tuple[object, Tuple[str, ...]], ...]
+    #: schema-declared semantic roles of the table's attributes
+    #: ((attr name, role) pairs; see repro.core.roughset.ATTRIBUTE_ROLES).
+    #: Consumers interpret cores through these — never through attribute
+    #: names, which are whatever the collection schema happened to call its
+    #: fields.  Empty when the ingesting caller declared no roles.
+    roles: Tuple[Tuple[str, str], ...] = ()
+
+    def role_of(self, attr: str) -> Optional[str]:
+        """Declared role of one attribute (None when undeclared)."""
+        for name, role in self.roles:
+            if name == attr:
+                return role
+        return None
+
+    def core_alternatives(self) -> Tuple[Tuple[str, ...], ...]:
+        """Every minimal core the rough-set step found (ties preserved)."""
+        return self.core.cores
 
     def render(self) -> str:
         lines = [self.core.render()]
@@ -93,6 +110,13 @@ class RootCauseReport:
             if attrs:
                 lines.append(f"  entry {eid}: " + ", ".join(attrs))
         return "\n".join(lines)
+
+
+def _role_pairs(names: Sequence[str],
+                roles: Optional[Mapping[str, str]]) -> Tuple[Tuple[str, str], ...]:
+    if not roles:
+        return ()
+    return tuple((n, roles[n]) for n in names if n in roles)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,12 +137,16 @@ class AnalysisReport:
 
 
 def external_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
-                         ext: ExternalReport) -> Optional[RootCauseReport]:
+                         ext: ExternalReport,
+                         roles: Optional[Mapping[str, str]] = None
+                         ) -> Optional[RootCauseReport]:
     """Rough-set root causes for external bottlenecks (paper §3.4.2).
 
     Per-attribute OPTICS clustering is restricted to the CCCR columns; the
     per-process attribution is computed with vectorized masks so repeated
-    window analysis stays cheap.
+    window analysis stays cheap.  ``roles`` (attribute name -> semantic
+    role, normally the collection schema's declaration) rides along on the
+    report so downstream consumers never hardcode attribute names.
     """
     if not ext.exists or not ext.cccrs:
         return None
@@ -139,11 +167,13 @@ def external_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
     flagged = (ids != 0) & core_mask[None, :]
     per_entry = tuple((i, tuple(itertools.compress(names, flagged[i])))
                       for i in range(m))
-    return RootCauseReport(table, core, per_entry)
+    return RootCauseReport(table, core, per_entry, _role_pairs(names, roles))
 
 
 def internal_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
-                         internal: InternalReport) -> Optional[RootCauseReport]:
+                         internal: InternalReport,
+                         roles: Optional[Mapping[str, str]] = None
+                         ) -> Optional[RootCauseReport]:
     """Rough-set root causes for internal bottlenecks (paper §3.4.3),
     vectorized over regions and attributes."""
     if not internal.cccrs:
@@ -167,7 +197,7 @@ def internal_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
     cccr_set = set(internal.cccrs)
     per_entry = tuple((rid, tuple(itertools.compress(names, flagged[r])))
                       for r, rid in enumerate(region_ids) if rid in cccr_set)
-    return RootCauseReport(table, core, per_entry)
+    return RootCauseReport(table, core, per_entry, _role_pairs(names, roles))
 
 
 class AutoAnalyzer:
@@ -176,28 +206,35 @@ class AutoAnalyzer:
     convenient object API (``AutoAnalyzer(tree, meas, attrs).analyze()``)."""
 
     def __init__(self, tree: RegionTree, measurements: Measurements,
-                 attributes: Mapping[str, np.ndarray]):
+                 attributes: Mapping[str, np.ndarray],
+                 attr_roles: Optional[Mapping[str, str]] = None):
         self.tree = tree
         self.meas = measurements
         self.attrs = {k: as_matrix(v) for k, v in attributes.items()}
+        self.attr_roles = dict(attr_roles or {})
         m, n = as_matrix(measurements.cpu_time).shape
         for k, v in self.attrs.items():
             if v.shape != (m, n):
                 raise ValueError(f"attribute {k} shape {v.shape} != {(m, n)}")
 
     def _external_root_causes(self, ext: ExternalReport) -> Optional[RootCauseReport]:
-        return external_root_causes(self.tree, self.attrs, ext)
+        return external_root_causes(self.tree, self.attrs, ext,
+                                    roles=self.attr_roles)
 
     def _internal_root_causes(self, internal: InternalReport) -> Optional[RootCauseReport]:
-        return internal_root_causes(self.tree, self.attrs, internal)
+        return internal_root_causes(self.tree, self.attrs, internal,
+                                    roles=self.attr_roles)
 
     def analyze(self) -> AnalysisReport:
         from .session import analyze_window
-        return analyze_window(self.tree, self.meas, self.attrs)
+        return analyze_window(self.tree, self.meas, self.attrs,
+                              roles=self.attr_roles)
 
 
 def analyze(tree: RegionTree, measurements: Measurements,
-            attributes: Mapping[str, np.ndarray]) -> AnalysisReport:
+            attributes: Mapping[str, np.ndarray],
+            attr_roles: Optional[Mapping[str, str]] = None) -> AnalysisReport:
     """One-shot analysis — a single-window :class:`AnalysisSession`."""
     from .session import AnalysisSession
-    return AnalysisSession(tree).ingest(measurements, attributes).report
+    return AnalysisSession(tree).ingest(measurements, attributes,
+                                        attr_roles=attr_roles).report

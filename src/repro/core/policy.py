@@ -40,6 +40,7 @@ from typing import (Dict, Hashable, List, Mapping, Optional, Sequence, Tuple)
 
 import numpy as np
 
+from .roughset import ROLE_WORK
 from .session import AnalysisSession, WindowEntry
 
 #: Decision reasons recorded in the :class:`PolicyLog`.
@@ -191,31 +192,53 @@ class RebalancePolicy(Policy):
 
 
 class ReshardPolicy(Policy):
-    """Data re-shard on a persistent ``instructions`` root cause.
+    """Data re-shard on a persistent *work-imbalance* root cause.
 
-    The paper's rough-set reading: when the core of the *external* decision
-    table is ``{instructions}``, processes differ in *how much work they
-    were handed*, not how fast they run it — the fix is repartitioning the
-    data, not replacing hardware (the ST case study's static -> dynamic
-    dispatch).  ``scopes`` defaults to external only: an *internal* core
-    naming instructions merely says a region is compute-heavy, which is not
-    an imbalance signal."""
+    The paper's rough-set reading: when a minimal core of the *external*
+    decision table names the work attribute (``instructions`` under the
+    paper schema, ``hlo_flops`` under ``tpu``), processes differ in *how
+    much work they were handed*, not how fast they run it — the fix is
+    repartitioning the data, not replacing hardware (the ST case study's
+    static -> dynamic dispatch).  The attribute is matched by its
+    schema-declared semantic role (:data:`~repro.core.roughset.ROLE_WORK`),
+    so a schema can rename or add cost fields without touching this policy;
+    streams that declare no roles fall back to the paper's attribute name
+    (``fallback_attr``).  Any minimal-core *alternative* naming the work
+    attribute counts: work imbalance alone then suffices to discern the
+    bottleneck, even when a co-varying attribute (e.g. the I/O bytes of the
+    same oversized shard) ties with it.  ``scopes`` defaults to external
+    only: an *internal* core naming work merely says a region is
+    compute-heavy, which is not an imbalance signal."""
 
     name = "reshard"
 
-    def __init__(self, attr: str = "instructions",
-                 scopes: Tuple[str, ...] = ("external",)):
-        self.attr = attr
+    def __init__(self, role: str = ROLE_WORK,
+                 scopes: Tuple[str, ...] = ("external",),
+                 fallback_attr: str = "instructions"):
+        self.role = role
         self.scopes = scopes
+        self.fallback_attr = fallback_attr
+
+    def _work_attrs(self, entry: WindowEntry, which: str) -> Tuple[str, ...]:
+        named = sorted({a for core in entry.core_alternatives(which)
+                        for a in core})
+        matched = tuple(a for a in named
+                        if entry.role_of(a, which) == self.role)
+        if matched:
+            return matched
+        if any(entry.role_of(a, which) is not None for a in named):
+            return ()          # roles declared; none of them is work
+        return tuple(a for a in named if a == self.fallback_attr)
 
     def observe(self, entry: WindowEntry,
                 session: AnalysisSession) -> List[Action]:
-        scopes = tuple(w for w in self.scopes
-                       if self.attr in entry.core_attributes(w))
+        hits = {w: self._work_attrs(entry, w) for w in self.scopes}
+        scopes = tuple(w for w in self.scopes if hits[w])
         if not scopes:
             return []
-        return [Action(kind="reshard", target=self.attr,
-                       params={"scopes": scopes,
+        target = hits[scopes[0]][0]
+        return [Action(kind="reshard", target=target,
+                       params={"scopes": scopes, "role": self.role,
                                "external_core": entry.core_attributes("external"),
                                "internal_core": entry.core_attributes("internal")})]
 

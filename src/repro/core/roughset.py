@@ -22,6 +22,29 @@ import numpy as np
 SAME_DECISION = 0      # decisions equal -> no constraint
 INDISCERNIBLE = -1     # decisions differ but no attribute does (inconsistent)
 
+# ---------------------------------------------------------------------------
+# Attribute roles
+# ---------------------------------------------------------------------------
+# The paper reads its rough-set cores through the *meaning* of the five PAPI
+# attributes (a core naming ``instructions`` => work imbalance => re-shard;
+# ``network_io`` => communication; ...).  Those meanings are not properties
+# of the analyzer — they are properties of whatever attribute set the
+# collection schema declared.  Schemas therefore tag each attribute field
+# with a semantic *role* from this vocabulary, and every downstream consumer
+# (policies, verdict rendering, drivers) interprets cores via roles instead
+# of hardcoded attribute names — so a schema can add or rename cost fields
+# without touching the analyzer.
+
+ROLE_WORK = "work"        # amount of work handed to a process (instructions,
+                          # HLO flops): an imbalanced core => repartition data
+ROLE_NETWORK = "network"  # inter-process communication volume (network I/O,
+                          # collective bytes)
+ROLE_MEMORY = "memory"    # memory-hierarchy boundedness (cache miss rates,
+                          # HBM/vmem pressure ratios)
+ROLE_IO = "io"            # host/disk I/O volume (disk bytes, host transfers)
+
+ATTRIBUTE_ROLES = (ROLE_WORK, ROLE_NETWORK, ROLE_MEMORY, ROLE_IO)
+
 
 @dataclasses.dataclass(frozen=True)
 class DecisionTable:

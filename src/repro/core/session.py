@@ -64,11 +64,15 @@ def _checked_attrs(measurements: Measurements,
 
 
 def analyze_window(tree: RegionTree, measurements: Measurements,
-                   attributes: Mapping[str, np.ndarray]) -> AnalysisReport:
-    """The paper's full single-window pipeline (§4 driver)."""
+                   attributes: Mapping[str, np.ndarray],
+                   roles: Optional[Mapping[str, str]] = None
+                   ) -> AnalysisReport:
+    """The paper's full single-window pipeline (§4 driver).  ``roles`` is
+    the collection schema's attribute-role declaration, recorded on the
+    root-cause reports for name-free interpretation of cores."""
     report, _, _ = _analyze_window_cached(tree, measurements, attributes,
                                           memo=None, internal_gate_s=None,
-                                          keep_memo=False)
+                                          keep_memo=False, roles=roles)
     return report
 
 
@@ -82,10 +86,15 @@ class _WindowMemo:
     report: AnalysisReport
 
 
-def _fingerprint_attrs(attrs: Mapping[str, np.ndarray]) -> bytes:
+def _fingerprint_attrs(attrs: Mapping[str, np.ndarray],
+                       roles: Optional[Mapping[str, str]]) -> bytes:
     names = sorted(attrs)
-    return fingerprint_arrays(*(attrs[k] for k in names),
-                              salt="\x00".join(names))
+    salt = "\x00".join(names)
+    if roles:
+        # roles land on the cached RootCauseReports, so a role change must
+        # miss the memo even when the matrices are bit-identical
+        salt += "\x01" + "\x00".join(f"{k}={roles[k]}" for k in sorted(roles))
+    return fingerprint_arrays(*(attrs[k] for k in names), salt=salt)
 
 
 def _gated_internal(tree: RegionTree) -> InternalReport:
@@ -99,7 +108,8 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
                            attributes: Mapping[str, np.ndarray],
                            memo: Optional[_WindowMemo],
                            internal_gate_s: Optional[float],
-                           keep_memo: bool = True
+                           keep_memo: bool = True,
+                           roles: Optional[Mapping[str, str]] = None
                            ) -> Tuple[AnalysisReport, Tuple[str, ...],
                                       Optional[_WindowMemo]]:
     """Single-window pipeline with stage-level reuse against ``memo``.
@@ -117,7 +127,7 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
         fp_internal = fingerprint_arrays(
             measurements.wall_time, measurements.program_wall,
             measurements.cycles, measurements.instructions)
-        fp_attrs = _fingerprint_attrs(attrs)
+        fp_attrs = _fingerprint_attrs(attrs, roles)
     else:
         fp_cpu = fp_internal = fp_attrs = b""
     hits: List[str] = []
@@ -129,10 +139,10 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
             ext_rc = memo.report.external_root_causes
             hits.append("external_root_causes")
         else:
-            ext_rc = external_root_causes(tree, attrs, ext)
+            ext_rc = external_root_causes(tree, attrs, ext, roles=roles)
     else:
         ext = analyze_external(tree, measurements.cpu_time)
-        ext_rc = external_root_causes(tree, attrs, ext)
+        ext_rc = external_root_causes(tree, attrs, ext, roles=roles)
 
     gated = (internal_gate_s is not None and not ext.exists
              and ext.severity < internal_gate_s)
@@ -148,12 +158,12 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
             int_rc = memo.report.internal_root_causes
             hits.append("internal_root_causes")
         else:
-            int_rc = internal_root_causes(tree, attrs, internal)
+            int_rc = internal_root_causes(tree, attrs, internal, roles=roles)
     else:
         cm = crnm(measurements.wall_time, measurements.program_wall,
                   measurements.cycles, measurements.instructions)
         internal = analyze_internal(tree, cm)
-        int_rc = internal_root_causes(tree, attrs, internal)
+        int_rc = internal_root_causes(tree, attrs, internal, roles=roles)
 
     report = AnalysisReport(external=ext, internal=internal,
                             external_root_causes=ext_rc,
@@ -263,9 +273,29 @@ class WindowEntry:
         """The rough-set core for ``which`` ("external" or "internal") —
         the attribute names the decision table cannot discern bottlenecks
         without; ``()`` when that analysis found no bottleneck."""
-        rc = (self.report.external_root_causes if which == "external"
-              else self.report.internal_root_causes)
+        rc = self._root_causes(which)
         return rc.core.core if rc is not None else ()
+
+    def core_alternatives(self, which: str = "external"
+                          ) -> Tuple[Tuple[str, ...], ...]:
+        """Every minimal rough-set core for ``which`` (ties preserved —
+        ``core_attributes`` is the first alternative).  An attribute
+        appearing in *some* minimal core suffices on its own to discern
+        the bottleneck, which is the question role-driven policies ask."""
+        rc = self._root_causes(which)
+        return rc.core_alternatives() if rc is not None else ()
+
+    def role_of(self, attr: str, which: str = "external") -> Optional[str]:
+        """Schema-declared semantic role of ``attr`` (see
+        ``repro.core.roughset.ATTRIBUTE_ROLES``); ``None`` when the
+        ingesting snapshot declared none.  Policies interpret cores through
+        roles, never through schema-specific attribute names."""
+        rc = self._root_causes(which)
+        return rc.role_of(attr) if rc is not None else None
+
+    def _root_causes(self, which: str):
+        return (self.report.external_root_causes if which == "external"
+                else self.report.internal_root_causes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -372,14 +402,18 @@ class AnalysisSession:
     def ingest(self, measurements: Measurements,
                attributes: Mapping[str, np.ndarray],
                label: Optional[str] = None,
-               gap_ranks: Tuple[int, ...] = ()) -> WindowEntry:
+               gap_ranks: Tuple[int, ...] = (),
+               attr_roles: Optional[Mapping[str, str]] = None) -> WindowEntry:
         """Analyze one window of raw matrices and append it to the timeline.
         ``gap_ranks`` marks ranks whose rows are zero-filled placeholders
-        (missing hosts in a merged pod view)."""
+        (missing hosts in a merged pod view).  ``attr_roles`` is the
+        schema's attribute-name -> semantic-role declaration (snapshots
+        supply it automatically via ``ingest_snapshot``)."""
         report, hits, memo = _analyze_window_cached(
             self.tree, measurements, attributes,
             memo=self._memo if self.reuse else None,
-            internal_gate_s=self.internal_gate_s, keep_memo=self.reuse)
+            internal_gate_s=self.internal_gate_s, keep_memo=self.reuse,
+            roles=attr_roles)
         if self.reuse:
             self._memo = memo
         prev = self._entries[-1].report if self._entries else None
@@ -398,12 +432,16 @@ class AnalysisSession:
 
     def ingest_snapshot(self, snap, label: Optional[str] = None) -> WindowEntry:
         """Analyze a ``perfdbg.recorder.WindowSnapshot``; the snapshot's
-        ``gap_mask`` (merged pod views) becomes the entry's ``gap_ranks``."""
+        ``gap_mask`` (merged pod views) becomes the entry's ``gap_ranks``
+        and its schema's declared attribute roles ride along onto the
+        root-cause reports."""
         mask = getattr(snap, "gap_mask", None)
         gaps = tuple(int(r) for r in np.flatnonzero(mask)) \
             if mask is not None else ()
+        roles_fn = getattr(snap, "attribute_roles", None)
         return self.ingest(snap.measurements(), snap.attributes(),
-                           label=label or snap.label, gap_ranks=gaps)
+                           label=label or snap.label, gap_ranks=gaps,
+                           attr_roles=roles_fn() if roles_fn else None)
 
     def ingest_recorder(self, recorder, label: Optional[str] = None
                         ) -> WindowEntry:

@@ -238,6 +238,18 @@ class Analyzer:
     def stats(self) -> Stats:
         return self._comp_stats(self.entry, top=True)
 
+    def stats_by_computation(self) -> Dict[str, Stats]:
+        """Per-computation trip-aware aggregates: each computation's own
+        standalone cost (whiles inside it multiplied by their trip counts,
+        fusion callees folded in), keyed by computation name.  The entry's
+        value equals :meth:`stats`.  This is the public feed for cost
+        providers (``perfdbg.costs.HloCosts``) that re-attribute named
+        computations to code regions; note a callee's standalone stats are
+        *not* disjoint from its caller's — attribution must pick disjoint
+        computations (HloCosts documents this)."""
+        return {name: self._comp_stats(name, top=True)
+                for name in self.comps}
+
     def _comp_stats(self, name: str, top: bool) -> Stats:
         key = (name, top)
         if key in self._memo:

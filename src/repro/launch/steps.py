@@ -121,6 +121,35 @@ def make_serve_step(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# Compiled-cost plumbing (the HLO half of the cost-provider layer)
+# ---------------------------------------------------------------------------
+
+def compiled_hlo(jitted, *args) -> str:
+    """Post-SPMD optimized HLO text of ``jitted`` for ``args`` (concrete
+    arrays or ShapeDtypeStruct trees).  This is the per-device module the
+    trip-aware cost analyzer consumes; lowering+compiling here does not
+    populate the jit call cache, so drivers pay one extra compile for
+    measured costs (cheap next to a training run)."""
+    return jitted.lower(*args).compile().as_text()
+
+
+def hlo_cost_provider(hlo_text: str, regions, anchor: str = "step",
+                      base=None):
+    """Build an ``perfdbg.costs.HloCosts`` provider from one compiled
+    module: trip-aware per-computation stats (``hlo_analysis.Analyzer``)
+    anchored at ``regions``' ``anchor`` (the region whose body launches the
+    module), name-prefix re-attribution to the other regions, analytic
+    ``base`` fallback for regions the module cannot see (host-side data /
+    checkpoint I/O).  This glue lives in the launch layer so ``perfdbg``
+    never imports the HLO parser."""
+    from repro.launch.hlo_analysis import Analyzer
+    from repro.perfdbg.costs import HloCosts
+    a = Analyzer(hlo_text)
+    return HloCosts(regions, base=base).add_module(
+        a.stats_by_computation(), entry=a.entry, anchor=anchor)
+
+
+# ---------------------------------------------------------------------------
 # Sharded jit wrappers
 # ---------------------------------------------------------------------------
 

@@ -15,6 +15,12 @@ Features exercised end-to-end (CPU-sized here, mesh-parametric for pods):
   * --pod-gather allgathers every host's window shard into one m-rank
     snapshot before analysis (single-process here: same path, one shard)
   * --schema selects the attribute set (paper PAPI-era vs tpu roofline)
+  * --costs selects the cost provider feeding the schema's attribute
+    fields: 'analytic' (closed-form estimates, perfdbg.costs.AnalyticCosts)
+    or 'hlo' (per-region flops / HBM bytes / collective bytes measured from
+    the jitted step's compiled HLO; the default under --schema tpu).  Host-
+    side regions (data, checkpoint) always come from the analytic base —
+    a compiled module cannot see them
   * --inject-bottleneck-at N burns CPU in the data region from step N
     (a synthetic mid-run regression for exercising the streaming analyzer)
   * --policies attaches a core.policy.PolicyEngine to the window stream
@@ -55,6 +61,11 @@ def main(argv=None) -> int:
                     help="window length in steps for the streaming analyzer")
     ap.add_argument("--schema", default="paper", choices=("paper", "tpu"),
                     help="attribute schema for the recorder")
+    ap.add_argument("--costs", default=None, choices=("analytic", "hlo"),
+                    help="cost provider for schema attributes: closed-form "
+                         "estimates or measurements from the compiled "
+                         "step's HLO (default: hlo under --schema tpu, "
+                         "analytic otherwise)")
     ap.add_argument("--sync-analysis", action="store_true",
                     help="analyze windows inline on the step loop instead of "
                          "on the async worker thread")
@@ -81,8 +92,13 @@ def main(argv=None) -> int:
                          "a policy fires")
     ap.add_argument("--sim-ranks", type=int, default=1,
                     help="simulate an M-rank pod from rank-0 measurements "
-                         "(per-rank work shares; enables the closed-loop "
-                         "rebalance demo)")
+                         "(per-rank shard sizes; enables the closed-loop "
+                         "rebalance/reshard demos)")
+    ap.add_argument("--sim-shard-skew", type=float, default=1.0,
+                    help="with --sim-ranks > 1: rank 0's initial shard is "
+                         "this factor of the uniform size (a skewed data "
+                         "partition — the reshard demo's injected fault; a "
+                         "fired ReshardPolicy repartitions back to uniform)")
     ap.add_argument("--inject-factor", type=float, default=4.0,
                     help="slowdown of the last simulated rank under "
                          "--sim-ranks + --inject-bottleneck-at")
@@ -100,9 +116,9 @@ def main(argv=None) -> int:
     from repro.launch import steps as steps_lib
     from repro.models.model import input_specs
     from repro.optim import adamw
-    from repro.perfdbg import Instrumenter, RegionRecorder
-    from repro.perfdbg.attributes import RIDGE_INTENSITY
+    from repro.perfdbg import AnalyticCosts, Instrumenter, RegionRecorder
     from repro.perfdbg.instrument import CPU_CLOCK, NOMINAL_HZ
+    from repro.perfdbg.schema import SUM
     from repro.ckpt import checkpoint as ckpt
 
     overrides = dict(d_model=args.d_model,
@@ -141,27 +157,72 @@ def main(argv=None) -> int:
             print(f"[train] restored step {start_step} from {args.ckpt_dir}",
                   flush=True)
 
+    # cost provider: where the schema's attribute fields come from.  The
+    # analytic base (the estimates this driver used to inline) always
+    # covers the host-side regions; --costs hlo overlays per-region flops /
+    # HBM bytes / collective bytes measured from the compiled step.
+    tokens_per_step = args.batch * args.seq
+    region_names = ("data", "step", "checkpoint")
+    costs_mode = args.costs or ("hlo" if args.schema == "tpu" else "analytic")
+    provider = AnalyticCosts.for_train_step(
+        active_params=cfg.active_params(), total_params=cfg.total_params(),
+        d_model=cfg.d_model, n_layers=cfg.n_layers,
+        tokens_per_step=tokens_per_step,
+        checkpoint_io_bytes=0.0 if not args.ckpt_dir else 1.0)
+    if costs_mode == "hlo":
+        with mesh:
+            hlo_text = steps_lib.compiled_hlo(jitted, st_shapes, bshapes)
+        provider = steps_lib.hlo_cost_provider(
+            hlo_text, region_names, anchor="step", base=provider)
+        print("[costs] coverage: " + provider.render_coverage(), flush=True)
+    step_costs = provider.region_costs("step")
+    flops_per_step = step_costs.get("hlo_flops", 0.0)
+    print(f"[costs] {costs_mode} step: "
+          f"hlo_flops={step_costs.get('hlo_flops', 0.0):.3e} "
+          f"hbm_bytes={step_costs.get('hbm_bytes', 0.0):.3e} "
+          f"collective_bytes={step_costs.get('collective_bytes', 0.0):.3e} "
+          f"hbm_boundedness={step_costs.get('hbm_boundedness', 0.0):.3f}",
+          flush=True)
+
     # region tree for the instrumented step.  M = 1: the real single shard
     # of this container.  M > 1: a simulated pod — rank 0's measured times
-    # are scaled by per-rank work shares (and the injected slow factor for
+    # are scaled by per-rank shard sizes (and the injected slow factor for
     # the last rank), so external/straggler analysis and the closed
-    # rebalance loop run for real on synthetic-but-live data.
+    # rebalance/reshard loops run for real on synthetic-but-live data.
     M = max(args.sim_ranks, 1)
     tree = RegionTree("train")
-    for nm in ("data", "step", "checkpoint"):
+    for nm in region_names:
         tree.add(nm)
-    rec = RegionRecorder(tree, n_ranks=M, schema=args.schema)
+    rec = RegionRecorder(tree, n_ranks=M, schema=args.schema,
+                         cost_provider=provider if M == 1 else None)
     ins = Instrumenter(rec, rank=0)
     rids = {tree.name(r): r for r in tree.ids()}
-    shares = np.full(M, 1.0 / M)          # fraction of global work per rank
+    # per-rank data-shard sizes (tokens per step).  Uniform unless
+    # --sim-shard-skew injects a skewed partition; a fired rebalance or
+    # reshard action rewrites this vector — the sim's actuation surface.
+    shard_tokens = np.full(M, tokens_per_step / M)
+    if M > 1 and args.sim_shard_skew != 1.0:
+        shard_tokens[0] *= args.sim_shard_skew
+        shard_tokens *= tokens_per_step / shard_tokens.sum()
+    shares = shard_tokens / shard_tokens.sum()   # fraction of work per rank
     sim = {"slow": 1.0}                   # last rank's current slow factor
+    if M > 1:
+        print(f"[train] simulated pod: {M} ranks, shards "
+              f"{np.round(shard_tokens).astype(int).tolist()} tok/step",
+              flush=True)
+    # rank 0's per-execution provider costs per region; rank r's shard is
+    # f times rank 0's, so its SUM counters (bytes, flops) scale with f
+    # while WMEAN ratios (boundedness) describe the kernel, not the size
+    pvals = {nm: rec.schema.values_from_provider(provider.region_costs(nm))
+             for nm in region_names}
+    sum_fields = {f.name for f in rec.schema.fields if f.reduction == SUM}
 
     @contextlib.contextmanager
-    def region(name, *, instructions=0.0, nominal_cpi=None, **attrs):
+    def region(name, *, instructions=0.0, nominal_cpi=None):
         """Instrument one region for the whole (real or simulated) pod."""
         if M == 1:
             with ins.region(name, instructions=instructions,
-                            nominal_cpi=nominal_cpi, **attrs):
+                            nominal_cpi=nominal_cpi):
                 yield
             return
         w0, c0 = time.perf_counter(), CPU_CLOCK()
@@ -176,8 +237,11 @@ def main(argv=None) -> int:
             for r in range(M):
                 f = shares[r] / max(shares[0], 1e-12)
                 s = sim["slow"] if r == M - 1 else 1.0
-                # a sick host does the same work (instructions scale with
-                # its share only), just slower (times scale with s too)
+                attrs = {k: (v * f if k in sum_fields else v)
+                         for k, v in pvals[name].items()}
+                # a sick host does the same work (instructions and byte
+                # counters scale with its shard only), just slower (times
+                # scale with s too)
                 rec.add(r, rids[name], cpu_time=cpu * f * s,
                         wall_time=wall * f * s, cycles=cycles * f * s,
                         instructions=instr * f, **attrs)
@@ -227,18 +291,31 @@ def main(argv=None) -> int:
                 print(f"[policy] {d.render()}", flush=True)
 
     def apply_actions(actions):
-        nonlocal shares
+        nonlocal shares, shard_tokens
         for act in actions:
             if act.kind == "rebalance" and "weights" in act.params:
                 w = np.asarray(act.params["weights"], dtype=np.float64)
                 if w.sum() > 0:
                     shares = w / w.sum()
+                    shard_tokens = shares * tokens_per_step
                 print(f"[policy] applied rebalance from window {act.window}: "
                       f"shares -> {np.round(shares, 3).tolist()}", flush=True)
             elif act.kind == "reshard":
-                print(f"[policy] reshard fired (window {act.window}, "
-                      f"core names {act.target!r}): repartition the data "
-                      f"pipeline", flush=True)
+                if M > 1:
+                    # actuate: repartition the simulated shards to uniform —
+                    # the fix for a skewed partition (work imbalance), as
+                    # opposed to rebalance's speed-weighted shares
+                    shard_tokens = np.full(M, tokens_per_step / M)
+                    shares = shard_tokens / shard_tokens.sum()
+                    print(f"[policy] applied reshard from window "
+                          f"{act.window} (work attr {act.target!r}): "
+                          f"shards -> uniform "
+                          f"{np.round(shard_tokens).astype(int).tolist()} "
+                          f"tok/step", flush=True)
+                else:
+                    print(f"[policy] reshard fired (window {act.window}, "
+                          f"core names {act.target!r}): repartition the "
+                          f"data pipeline", flush=True)
             elif act.kind == "quarantine":
                 print(f"[policy] quarantine fired: rank {act.target} missing "
                       f"since window {act.evidence[0]}", flush=True)
@@ -252,26 +329,6 @@ def main(argv=None) -> int:
             tree, max_queue=args.analysis_queue,
             backpressure=args.analysis_backpressure.replace("-", "_"),
             on_window=on_window, policy_engine=engine)
-
-    tokens_per_step = args.batch * args.seq
-    flops_per_step = 6 * cfg.active_params() * tokens_per_step
-    # per-region attribute kwargs, keyed by the recorder's schema
-    if args.schema == "tpu":
-        # rough HBM traffic estimate: params touched twice (fwd+bwd reads)
-        # plus activations; only the ratio to flops matters for the flags
-        bytes_per_step = 2.0 * cfg.total_params() * 2 \
-            + 8.0 * tokens_per_step * cfg.d_model * cfg.n_layers
-        hbm_b = float(np.clip(
-            1.0 - (flops_per_step / max(bytes_per_step, 1.0)) / RIDGE_INTENSITY,
-            0.0, 1.0))
-        data_kw = dict(host_io_bytes=tokens_per_step * 8)
-        step_kw = dict(hbm_boundedness=hbm_b, vmem_pressure=0.5 * hbm_b,
-                       collective_bytes=0.0)
-        ckpt_kw = lambda active: dict(host_io_bytes=float(active))
-    else:
-        data_kw = dict(disk_io=tokens_per_step * 8)
-        step_kw = {}
-        ckpt_kw = lambda active: dict(disk_io=float(active))
 
     def burn(ms: float) -> None:
         t_end = time.perf_counter() + ms / 1e3
@@ -304,17 +361,17 @@ def main(argv=None) -> int:
                 step + 1 >= args.inject_bottleneck_at
             sim["slow"] = args.inject_factor if (M > 1 and injecting) else 1.0
             with program():
-                with region("data", nominal_cpi=1.0, **data_kw):
+                # attribute fields come from the attached cost provider
+                # (M > 1: pulled and shard-scaled by the sim's region())
+                with region("data", nominal_cpi=1.0):
                     if injecting and M == 1:
                         burn(args.inject_ms)
                     batch = data.next_prefetched()
                     batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                with region("step", instructions=flops_per_step,
-                            **step_kw):
+                with region("step", instructions=flops_per_step):
                     state, metrics = jitted(state, batch)
                     loss = float(metrics["loss"])
-                with region("checkpoint", nominal_cpi=1.0,
-                            **ckpt_kw(0 if not saver else 1)):
+                with region("checkpoint", nominal_cpi=1.0):
                     if saver and (step + 1) % args.ckpt_every == 0:
                         saver.save(step + 1, {"state": state,
                                               "data": data.state_dict()})
@@ -341,6 +398,18 @@ def main(argv=None) -> int:
             print(f"[train] analysis dropped {pipeline.dropped} window(s) "
                   f"under backpressure", flush=True)
     print(report.render(tree), flush=True)
+    wins = rec.windows()
+    if wins:
+        # recorded (not provider-advertised) attribute totals of the step
+        # region, last window — the end-to-end check that schema fields
+        # really carry the provider's numbers
+        col = list(tree.ids()).index(rids["step"])
+        wm = {f.export_name for f in wins[-1].schema.wmean_fields}
+        vals = {k: float(v[:, col].mean() if k in wm else v[:, col].sum())
+                for k, v in wins[-1].attributes().items()}
+        print(f"[report] step-region attrs (last window, {costs_mode}): "
+              + " ".join(f"{k}={v:.3e}" for k, v in sorted(vals.items())),
+              flush=True)
     if engine is not None:
         print(f"[train] policy log ({len(engine.log)} decision(s), "
               f"{len(engine.log.fired())} fired):", flush=True)

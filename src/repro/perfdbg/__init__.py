@@ -1,6 +1,8 @@
 """Instrumentation + collection substrate for AutoAnalyzer (paper §4)."""
 from .attributes import (dominant_term, region_attributes, roofline_terms,
                          HBM_BW, LINK_BW, PEAK_FLOPS)
+from .costs import (AnalyticCosts, CostProvider, HloCosts, ModuleCoverage,
+                    PROVIDER_KEYS, boundedness_ratios)
 from .instrument import Instrumenter, build_step_tree
 from .recorder import (ATTR_FIELDS, LOCATE_FIELDS, PAPER_BYTES_PER_CELL,
                        RECORD_DTYPE, RegionRecorder, WindowSnapshot,

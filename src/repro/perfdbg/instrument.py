@@ -77,7 +77,11 @@ class Instrumenter:
                **attrs: Optional[float]) -> Iterator[None]:
         """Time a region.  Keyword attributes are forwarded to the recorder
         and must belong to its schema (e.g. ``disk_io=...`` under the
-        ``paper`` schema, ``collective_bytes=...`` under ``tpu``).
+        ``paper`` schema, ``collective_bytes=...`` under ``tpu``).  When
+        the recorder has a cost provider attached (``perfdbg.costs``),
+        fields the provider covers need no keywords at all — each region
+        exit records one execution's provider costs automatically, and an
+        explicit keyword still wins over the provider.
 
         ``instructions`` is the workload's analytic op count.  For host-side
         regions with no analytic count (data loading, checkpoint I/O), pass

@@ -104,6 +104,12 @@ class WindowSnapshot:
     def attributes(self) -> Dict[str, np.ndarray]:
         return _attributes(self.schema, self.data)
 
+    def attribute_roles(self) -> Dict[str, str]:
+        """export name -> the schema's declared semantic role (see
+        ``repro.core.roughset.ATTRIBUTE_ROLES``); consumers interpret
+        rough-set cores through these instead of attribute names."""
+        return self.schema.roles_by_export()
+
     def packed(self) -> bytes:
         return self.data.tobytes()
 
@@ -266,11 +272,18 @@ def merge_snapshots(shards: Sequence[Optional[WindowSnapshot]],
 class RegionRecorder:
     """Accumulates per-(rank, region) metrics for the live window and exports
     the matrices ``repro.core`` consumes.  ``schema`` selects the attribute
-    set (a registered name or an :class:`AttributeSchema`)."""
+    set (a registered name or an :class:`AttributeSchema`).
+
+    ``cost_provider`` optionally attaches a ``perfdbg.costs.CostProvider``:
+    on every ``add``, schema fields with a declared ``provider_key`` that
+    the call did not pass explicitly are pulled from the provider (one
+    region execution's worth per add).  Precedence per field: explicit
+    keyword > provider > ``source`` locate-field mirror."""
 
     def __init__(self, tree: RegionTree, n_ranks: int,
                  schema: Union[str, AttributeSchema] = "paper",
-                 max_windows: int = 16, rank_offset: int = 0):
+                 max_windows: int = 16, rank_offset: int = 0,
+                 cost_provider=None):
         self.tree = tree
         self.n_ranks = n_ranks
         self.rank_offset = rank_offset
@@ -280,6 +293,8 @@ class RegionRecorder:
         self._windows: Deque[WindowSnapshot] = collections.deque(
             maxlen=max_windows)
         self.window_index = 0
+        self._provider = cost_provider
+        self._provider_vals: Dict[int, Dict[str, float]] = {}
         self._init_window()
 
     def _init_window(self) -> None:
@@ -295,6 +310,27 @@ class RegionRecorder:
         self._wmean_w = {f.name: np.zeros((self.n_ranks, n))
                          for f in self.schema.wmean_fields}
 
+    # -- cost provider -------------------------------------------------------
+    @property
+    def cost_provider(self):
+        return self._provider
+
+    def attach_provider(self, provider) -> None:
+        """Attach (or replace) the cost provider; the per-region value memo
+        is dropped so the next ``add`` re-pulls fresh costs."""
+        self._provider = provider
+        self._provider_vals.clear()
+
+    def _provider_values(self, region: int) -> Dict[str, float]:
+        """Schema field name -> provider value for one region execution,
+        memoized per region id (providers are pure; see costs.py)."""
+        vals = self._provider_vals.get(region)
+        if vals is None:
+            costs = self._provider.region_costs(self.tree.name(region))
+            vals = self.schema.values_from_provider(costs)
+            self._provider_vals[region] = vals
+        return vals
+
     # -- recording ---------------------------------------------------------
     def add(self, rank: int, region: int, *, cpu_time: float = 0.0,
             wall_time: float = 0.0, cycles: float = 0.0,
@@ -303,7 +339,9 @@ class RegionRecorder:
         recorder's schema; ``None`` values are skipped (field not measured
         this call).  SUM fields accumulate; WMEAN fields fold into a
         duration-weighted running mean (weight = wall time, falling back to
-        CPU time, then 1)."""
+        CPU time, then 1).  With a cost provider attached, fields it covers
+        are filled automatically (explicit keyword > provider > source
+        mirror)."""
         cell = self._data[rank, self._cols[region]]
         cell["cpu_time"] += cpu_time
         cell["wall_time"] += wall_time
@@ -315,9 +353,12 @@ class RegionRecorder:
         if unknown:
             raise TypeError(f"unknown attribute(s) {sorted(unknown)} for "
                             f"schema {self.schema.name!r}")
+        provided = self._provider_values(region) if self._provider else {}
         w = wall_time if wall_time > 0 else (cpu_time if cpu_time > 0 else 1.0)
         for f in self.schema.fields:
             val = attrs.get(f.name)
+            if val is None:
+                val = provided.get(f.name)
             if val is None and f.source is not None:
                 val = locate[f.source]
             if val is None:
@@ -390,6 +431,10 @@ class RegionRecorder:
 
     def attributes(self) -> Dict[str, np.ndarray]:
         return _attributes(self.schema, self._data)
+
+    def attribute_roles(self) -> Dict[str, str]:
+        """export name -> declared semantic role (see WindowSnapshot)."""
+        return self.schema.roles_by_export()
 
     def analyze(self):
         """Single-window analysis of the live window (does not reset)."""

@@ -23,9 +23,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
+
+from repro.core.roughset import (ROLE_IO, ROLE_MEMORY, ROLE_NETWORK,
+                                 ROLE_WORK)
 
 PAPER_BYTES_PER_CELL = 125
 
@@ -49,12 +52,25 @@ class AttributeField:
     the ``instructions`` locate field), unless an explicit value is given.
     ``export`` is the name under which the field appears in
     ``RegionRecorder.attributes()`` (defaults to ``name``).
+
+    ``provider_key`` names the key under which an attached
+    :class:`~repro.perfdbg.costs.CostProvider` reports this field's
+    per-execution value (``None`` = never provider-fed); ``role`` declares
+    the field's semantic role from :data:`repro.core.roughset.
+    ATTRIBUTE_ROLES`, which downstream consumers (policies, verdicts) read
+    instead of hardcoding attribute names.  Neither changes the packed
+    bytes, so both are excluded from the layout fingerprint (provider-fed
+    and kwargs-fed shards are wire-compatible).  ``role`` DOES ship in the
+    wire spec — a receiving analysis host interprets cores through it —
+    while ``provider_key`` stays collection-side only.
     """
 
     name: str
     reduction: str = SUM
     source: Optional[str] = None
     export: Optional[str] = None
+    provider_key: Optional[str] = None
+    role: Optional[str] = None
 
     def __post_init__(self):
         if self.reduction not in (SUM, WMEAN):
@@ -108,21 +124,32 @@ class AttributeSchema:
         """Stable digest of the schema's identity *and* packed layout.  Two
         schemas with the same name but different fields/reductions get
         different fingerprints, so snapshot transport can reject a shard
-        packed under a stale schema definition."""
+        packed under a stale schema definition.  ``provider_key``/``role``
+        are excluded on purpose: how a cell was *filled* does not change
+        what its bytes mean, so provider-fed and kwargs-fed shards stay
+        wire-compatible."""
         spec = [self.name, str(self.dtype().descr)]
         spec += [(f.name, f.reduction, f.source, f.export_name)
                  for f in self.fields]
         return hashlib.sha256(repr(spec).encode()).hexdigest()[:16]
 
     def to_spec(self) -> list:
-        """JSON-serializable field spec (for self-describing wire headers)."""
-        return [[f.name, f.reduction, f.source, f.export]
+        """JSON-serializable field spec (for self-describing wire headers).
+        Roles ship (a receiver's policies interpret cores through them);
+        ``provider_key`` does not (pulling from a provider is strictly a
+        collection-side act — a receiver only ever reads recorded cells).
+        The role entry is additive: it is excluded from :meth:`fingerprint`
+        and ``from_spec`` accepts role-less (pre-role) specs, so old blobs
+        stay readable."""
+        return [[f.name, f.reduction, f.source, f.export, f.role]
                 for f in self.fields]
 
     @classmethod
     def from_spec(cls, name: str, spec) -> "AttributeSchema":
-        return cls(name, tuple(AttributeField(n, red, src, exp)
-                               for n, red, src, exp in spec))
+        return cls(name, tuple(
+            AttributeField(e[0], e[1], e[2], e[3],
+                           role=e[4] if len(e) > 4 else None)
+            for e in spec))
 
     def within_budget(self) -> bool:
         """The paper's headline contract, per cell: <= 125 bytes."""
@@ -140,6 +167,26 @@ class AttributeSchema:
     @property
     def wmean_fields(self) -> Tuple[AttributeField, ...]:
         return tuple(f for f in self.fields if f.reduction == WMEAN)
+
+    @property
+    def provider_fields(self) -> Tuple[AttributeField, ...]:
+        """Fields an attached cost provider may fill (provider_key set)."""
+        return tuple(f for f in self.fields if f.provider_key is not None)
+
+    def values_from_provider(self, costs: Mapping[str, float]
+                             ) -> Dict[str, float]:
+        """Map one region's provider costs (``region_costs`` output, keyed
+        by provider key) onto this schema's field names.  Keys no field
+        declares are ignored — a provider may report more terms than a
+        given schema records."""
+        return {f.name: float(costs[f.provider_key])
+                for f in self.provider_fields if f.provider_key in costs}
+
+    def roles_by_export(self) -> Dict[str, str]:
+        """export name -> declared semantic role, for fields that have one
+        (the mapping snapshots carry to the analysis layer)."""
+        return {f.export_name: f.role for f in self.fields
+                if f.role is not None}
 
     def field(self, name: str) -> AttributeField:
         for f in self.fields:
@@ -185,24 +232,37 @@ def list_schemas() -> Tuple[str, ...]:
 #: duration-weighted means (a multi-call region's rate is not the last call's
 #: rate); I/O byte counts and instruction counts sum.  ``instr_attr`` mirrors
 #: the ``instructions`` locate field so root-cause tables can consult it
-#: without re-reading the locate block.
+#: without re-reading the locate block.  Provider keys follow the role map
+#: in ``perfdbg.attributes`` (l1 -> vmem pressure proxy, l2 -> HBM
+#: boundedness, disk -> host I/O, network -> collectives, instructions ->
+#: HLO flops), so one cost provider serves both built-in schemas.
 PAPER_SCHEMA = register_schema(AttributeSchema("paper", (
-    AttributeField("l1_miss_rate", WMEAN),
-    AttributeField("l2_miss_rate", WMEAN),
-    AttributeField("disk_io", SUM),
-    AttributeField("network_io", SUM),
+    AttributeField("l1_miss_rate", WMEAN,
+                   provider_key="vmem_pressure", role=ROLE_MEMORY),
+    AttributeField("l2_miss_rate", WMEAN,
+                   provider_key="hbm_boundedness", role=ROLE_MEMORY),
+    AttributeField("disk_io", SUM,
+                   provider_key="host_io_bytes", role=ROLE_IO),
+    AttributeField("network_io", SUM,
+                   provider_key="collective_bytes", role=ROLE_NETWORK),
     AttributeField("instr_attr", SUM, source="instructions",
-                   export="instructions"),
+                   export="instructions",
+                   provider_key="hlo_flops", role=ROLE_WORK),
 )))
 
 #: The TPU/roofline adaptation (see perfdbg.attributes for the derivation):
 #: pressure/boundedness ratios are rates (weighted means); byte counters and
-#: HLO flops sum.  ``hlo_flops`` mirrors ``instructions`` — workloads record
-#: analytic flop counts there.
+#: HLO flops sum.  ``hlo_flops`` mirrors ``instructions`` — with no provider
+#: attached, workloads record analytic flop counts there.
 TPU_SCHEMA = register_schema(AttributeSchema("tpu", (
-    AttributeField("vmem_pressure", WMEAN),
-    AttributeField("hbm_boundedness", WMEAN),
-    AttributeField("host_io_bytes", SUM),
-    AttributeField("collective_bytes", SUM),
-    AttributeField("hlo_flops", SUM, source="instructions"),
+    AttributeField("vmem_pressure", WMEAN,
+                   provider_key="vmem_pressure", role=ROLE_MEMORY),
+    AttributeField("hbm_boundedness", WMEAN,
+                   provider_key="hbm_boundedness", role=ROLE_MEMORY),
+    AttributeField("host_io_bytes", SUM,
+                   provider_key="host_io_bytes", role=ROLE_IO),
+    AttributeField("collective_bytes", SUM,
+                   provider_key="collective_bytes", role=ROLE_NETWORK),
+    AttributeField("hlo_flops", SUM, source="instructions",
+                   provider_key="hlo_flops", role=ROLE_WORK),
 )))

@@ -1,0 +1,82 @@
+"""Regenerate the checked-in HLO text fixtures:
+
+    PYTHONPATH=src python tests/data/make_hlo_fixtures.py
+
+Writes two compiled per-device modules under ``tests/data/hlo/``:
+
+``step_spmd.hlo.txt``
+    A tiny jitted train-ish step (scan of matmuls + global loss reduction)
+    compiled for TWO forced host devices with the batch sharded, so the
+    post-SPMD module carries a real ``all-reduce`` — the fixture for
+    HLO-measured ``collective_bytes`` and trip-aware flops.
+
+``while_sliced.hlo.txt``
+    A scan over xs (carried matmul accumulation), whose while body
+    dynamic-slices the stacked operand — the fixture for ``_trip_count``
+    and the sliced-parameter HBM accounting in ``_sliced_params``.
+
+The module constants at the top (shapes / trip counts) are what the tests
+assert against; regenerate ONLY on an intentional jax/XLA-version bump and
+re-check the expected numbers in tests/test_costs.py.
+
+The third fixture, ``regions_handwritten.hlo.txt``, is hand-written (it
+exists to pin the computation-name prefix matching exactly) and is NOT
+regenerated here.
+"""
+import os
+import pathlib
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import numpy as np
+
+HERE = pathlib.Path(__file__).parent / "hlo"
+
+# step_spmd: y = scan_4(tanh(c @ w)); loss = sum(y) over a batch sharded
+# across 2 devices.  flops ~= TRIPS * 2 * B * D * D per device half.
+B, D, TRIPS = 8, 32, 4
+# while_sliced: c <- c + x_i @ x_i over a stacked xs of N_SLICES slices.
+N_SLICES, M = 8, 16
+
+
+def step_spmd_text() -> str:
+    mesh = Mesh(np.asarray(jax.devices()[:2]).reshape(2), ("data",))
+
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=TRIPS)
+        return jnp.sum(y)
+
+    jitted = jax.jit(
+        f,
+        in_shardings=(NamedSharding(mesh, P()),
+                      NamedSharding(mesh, P("data", None))),
+        out_shardings=NamedSharding(mesh, P()))
+    return jitted.lower(
+        jax.ShapeDtypeStruct((D, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32)).compile().as_text()
+
+
+def while_sliced_text() -> str:
+    def g(xs, c):
+        def body(c, x):
+            return c + x @ x, None
+        out, _ = jax.lax.scan(body, c, xs)
+        return out
+
+    return jax.jit(g).lower(
+        jax.ShapeDtypeStruct((N_SLICES, M, M), jnp.float32),
+        jax.ShapeDtypeStruct((M, M), jnp.float32)).compile().as_text()
+
+
+if __name__ == "__main__":
+    HERE.mkdir(exist_ok=True)
+    (HERE / "step_spmd.hlo.txt").write_text(step_spmd_text())
+    (HERE / "while_sliced.hlo.txt").write_text(while_sliced_text())
+    for p in sorted(HERE.glob("*.hlo.txt")):
+        print(f"{p.name}: {p.stat().st_size} bytes")

@@ -69,6 +69,31 @@ def test_collective_bytes_spmd():
         pytest.skip("needs >1 device (run under dryrun env)")
 
 
+def test_stats_by_computation_public_api():
+    """Per-computation map: covers every parsed computation, entry equals
+    stats(), and as_dict carries the pre-summed total_collective_bytes."""
+    M, trips = 64, 5
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=trips)
+        return y
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, M), jnp.float32),
+        jax.ShapeDtypeStruct((M, M), jnp.float32)).compile()
+    a = Analyzer(compiled.as_text())
+    by_comp = a.stats_by_computation()
+    assert set(by_comp) == set(a.comps)
+    assert by_comp[a.entry].flops == a.stats().flops
+    d = by_comp[a.entry].as_dict()
+    assert d["total_collective_bytes"] == sum(d["collective_bytes"].values())
+    # the body is counted once in its own entry, trips times in the entry's
+    body_flops = max(s.flops for n, s in by_comp.items() if n != a.entry)
+    assert a.stats().flops == pytest.approx(trips * body_flops, rel=0.35)
+
+
 def test_nested_scan_multiplies():
     M = 64
     def f(x, w):
