@@ -1,8 +1,10 @@
 """Analysis fast-path scaling sweep: us-per-call over m ranks.
 
 Sweeps the window-analysis hot path over pod sizes m in {8, 64, 256, 1024,
-4096} and writes a flat ``{name: us_per_call}`` JSON (``BENCH_4.json`` at
-the repo root by default) — the perf trajectory future PRs diff against.
+4096} — plus a dedicated 16384-rank external tier — and writes a flat
+``{name: us_per_call}`` JSON (``BENCH_6.json`` at the repo root by default;
+the ``_meta`` entry records the result schema and collapse mode) — the perf
+trajectory future PRs diff against.
 
 Benchmarked stages (see docs/performance.md for the complexity table):
 
@@ -12,10 +14,18 @@ Benchmarked stages (see docs/performance.md for the complexity table):
 * ``external_analysis_m{m}``  full CCR/CCCR search on a pod-shaped matrix
                             (tiled ranks + one slow block, the SPMD shape)
 * ``external_jitter_m{m}``  same search with per-rank jitter (no duplicate
-                            rows, exercises the downdate path end to end)
+                            rows — the certified rank collapse engages at
+                            m >= 512 and the search runs over ball groups)
+* ``external_noisy_m{m}``   jittered pod with a band of high-noise ranks
+                            (partial collapse: most ranks ball-group, the
+                            noisy band stays distinct)
 * ``session_window_m{m}``   AnalysisSession.ingest per window over a
                             4-window timeline whose middle windows repeat
                             (incremental reuse engaged, as in production)
+
+The 16384-rank tier (``external_jitter_m16384``/``external_noisy_m16384``)
+runs in every sweep including ``--quick``: under the certified collapse it
+is milliseconds, and CI gating it is the point of this benchmark.
 
 Usage:
 
@@ -39,12 +49,14 @@ import time
 import numpy as np
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
-DEFAULT_OUT = REPO_ROOT / "BENCH_4.json"
+DEFAULT_OUT = REPO_ROOT / "BENCH_6.json"
 M_SWEEP = (8, 64, 256, 1024, 4096)
 QUICK_SWEEP = (8, 64, 256, 1024)
+M_EXTERNAL_XL = 16384    # external-search-only tier, all sweeps
 N_REGIONS = 14
 DEFAULT_FACTOR = 3.0
 SLACK_US = 1000.0
+SCHEMA = "analysis_scale/us_per_call/v2"
 
 
 def _tree():
@@ -63,6 +75,18 @@ def _pod_matrix(m: int, rng, jitter: float = 0.0) -> np.ndarray:
         perf = perf * (1.0 + jitter * rng.standard_normal(perf.shape))
     perf[: max(m // 8, 1), 3] *= 3.0
     return perf
+
+
+def _noisy_pod_matrix(m: int, rng) -> np.ndarray:
+    """Noisy-pod shape: the jittered pod plus a band of high-noise ranks
+    (sick hosts scattered far from the cloud).  The certified collapse
+    absorbs the quiet majority but must keep the noisy band distinct —
+    partial collapse: a couple of ball groups plus one group per sick
+    host, certificate checks over a group matrix that stays O(band)."""
+    perf = _pod_matrix(m, rng, jitter=1e-5)
+    band = slice(m // 2, m // 2 + max(m // 16, 1))
+    perf[band] *= 1.0 + 0.5 * rng.standard_normal(perf[band].shape)
+    return np.abs(perf)
 
 
 def _measurements(perf: np.ndarray, rng):
@@ -101,6 +125,9 @@ def run_sweep(ms, reps: int) -> dict:
             lambda: analyze_external(tree, tperf), reps)
         out[f"external_jitter_m{m}"] = _time(
             lambda: analyze_external(tree, jperf), reps)
+        nperf = _noisy_pod_matrix(m, rng)
+        out[f"external_noisy_m{m}"] = _time(
+            lambda: analyze_external(tree, nperf), reps)
 
         windows = [_measurements(tperf, rng) for _ in range(2)] \
             + [_measurements(_pod_matrix(m, rng, jitter=1e-3), rng)]
@@ -119,6 +146,20 @@ def run_sweep(ms, reps: int) -> dict:
             f"{k.rsplit('_', 1)[0]}={out[k]:.0f}us"
             for k in out if k.endswith(f"m{m}") or k == f"kmeans_n{m}_k5"),
             file=sys.stderr)
+
+    # external-search-only 16k tier: feasible (and CI-gated) only because
+    # the certified rank collapse shrinks the searches to a few ball groups
+    m = M_EXTERNAL_XL
+    rng = np.random.default_rng(m)
+    jperf = _pod_matrix(m, rng, jitter=1e-3)
+    out[f"external_jitter_m{m}"] = _time(
+        lambda: analyze_external(tree, jperf), reps)
+    nperf = _noisy_pod_matrix(m, rng)
+    out[f"external_noisy_m{m}"] = _time(
+        lambda: analyze_external(tree, nperf), reps)
+    print(f"# m={m}: external_jitter={out[f'external_jitter_m{m}']:.0f}us  "
+          f"external_noisy={out[f'external_noisy_m{m}']:.0f}us",
+          file=sys.stderr)
     return out
 
 
@@ -130,7 +171,11 @@ def check_regressions(current: dict, baseline_path: pathlib.Path,
               file=sys.stderr)
         return 0
     failures = []
-    for name in sorted(set(current) & set(baseline)):
+    shared = [name for name in sorted(set(current) & set(baseline))
+              if not name.startswith("_")
+              and isinstance(current[name], (int, float))
+              and isinstance(baseline[name], (int, float))]
+    for name in shared:
         cur, base = current[name], baseline[name]
         # 1ms absolute slack: sub-millisecond entries are scheduler noise
         # on shared runners; the gate is after order-of-magnitude blowups.
@@ -139,7 +184,7 @@ def check_regressions(current: dict, baseline_path: pathlib.Path,
                             f"baseline {base:.0f}us (+{SLACK_US:g}us slack)")
     for f in failures:
         print(f"REGRESSION {f}")
-    print(f"# checked {len(set(current) & set(baseline))} entries against "
+    print(f"# checked {len(shared)} entries against "
           f"{baseline_path.name}, {len(failures)} over {factor:g}x")
     return 1 if failures else 0
 
@@ -159,6 +204,8 @@ def main() -> int:
     ms = QUICK_SWEEP if args.quick else M_SWEEP
     reps = args.reps if args.reps is not None else 3
     results = {k: round(v, 1) for k, v in run_sweep(ms, reps).items()}
+    from repro.core import COLLAPSE_AUTO
+    results["_meta"] = {"schema": SCHEMA, "collapse": COLLAPSE_AUTO}
     args.out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {len(results)} entries to {args.out}", file=sys.stderr)
 

@@ -1,8 +1,10 @@
 """Benchmark harness — one section per paper table/figure plus the dry-run /
 roofline reports.  Prints ``name,us_per_call,derived`` CSV rows; ``--json``
 additionally writes them as ``{name: {"us_per_call": ..., "derived": ...}}``
-(the scaling sweep in ``benchmarks/analysis_scale.py`` uses the same row
-helper and emits the flat ``BENCH_4.json`` the CI perf-smoke job diffs).
+plus a ``_meta`` entry naming the result schema and the analysis collapse
+mode the rows were measured under (the scaling sweep in
+``benchmarks/analysis_scale.py`` emits the flat ``BENCH_6.json`` the CI
+perf-smoke job diffs, with the same ``_meta`` convention).
 
     PYTHONPATH=src python -m benchmarks.run [--st-scale 1.0] [--skip-kernels]
                                            [--json out.json]
@@ -262,7 +264,11 @@ def main() -> None:
     bench_dryrun()
     bench_roofline()
     if args.json is not None:
-        args.json.write_text(json.dumps(ROWS, indent=2, sort_keys=True) + "\n")
+        from repro.core import COLLAPSE_AUTO
+        out = dict(ROWS)
+        out["_meta"] = {"schema": "benchmarks/run/rows/v1",
+                        "collapse": COLLAPSE_AUTO}
+        args.json.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
         print(f"# wrote {len(ROWS)} rows to {args.json}", file=sys.stderr)
 
 

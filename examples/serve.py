@@ -17,6 +17,7 @@ detect -> decide loop is visible live (on this single-shard demo the
 straggler policies stay quiet — the audit trail is the point).
 """
 import argparse
+import os
 import time
 
 import jax
@@ -41,6 +42,12 @@ def main() -> int:
     ap.add_argument("--rounds", type=int, default=3,
                     help="decode rounds == analysis windows")
     ap.add_argument("--schema", default="paper", choices=("paper", "tpu"))
+    ap.add_argument("--analysis-workers", type=int,
+                    default=int(os.environ.get("PERFDBG_ANALYSIS_WORKERS",
+                                               "1")),
+                    help="analysis worker pool size (reports and policy "
+                         "decisions are identical for any value; env "
+                         "default PERFDBG_ANALYSIS_WORKERS)")
     ap.add_argument("--sync-analysis", action="store_true",
                     help="analyze each round inline instead of on the "
                          "async worker thread")
@@ -86,6 +93,7 @@ def main() -> int:
         # decode rounds only pay the snapshot copy; the analysis worker
         # drains the (bounded) queue behind the serving loop
         session, pipe = None, AsyncAnalysisSession(tree, max_queue=4,
+                                                   workers=args.analysis_workers,
                                                    on_window=on_window,
                                                    policy_engine=engine)
     io_kw = "host_io_bytes" if args.schema == "tpu" else "disk_io"

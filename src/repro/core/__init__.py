@@ -15,7 +15,9 @@ from .analyzer import (AnalysisReport, AutoAnalyzer, Measurements,
                        PAPER_ATTRIBUTES, RootCauseReport, analyze,
                        external_root_causes, fingerprint_arrays,
                        internal_root_causes)
-from .external import CCRNode, ExternalReport, analyze_external
+from .external import (CCRNode, COLLAPSE_AUTO, COLLAPSE_EXACT, COLLAPSE_MODES,
+                       COLLAPSE_QUANTIZED, CollapseCertificate, ExternalReport,
+                       analyze_external)
 from .internal import InternalReport, analyze_internal, attribute_flags, crnm
 from .kmeans import (KMeansResult, SEVERITY_NAMES, kmeans_1d,
                      kmeans_1d_reference, severity_classes)
@@ -31,8 +33,9 @@ from .pipeline import (AsyncAnalysisSession, BACKPRESSURE_POLICIES,
 from .policy import (Action, BUILTIN_POLICIES, CollectorQuarantinePolicy,
                      Decision, Policy, PolicyEngine, PolicyLog,
                      RebalancePolicy, ReshardPolicy, make_policies)
-from .session import (AnalysisSession, CACHE_STAGES, SessionReport,
-                      WindowDiff, WindowEntry, analyze_window, diff_reports)
+from .session import (AnalysisSession, CACHE_STAGES, PreparedWindow,
+                      SessionReport, WindowDiff, WindowEntry, analyze_window,
+                      diff_reports)
 from .vectors import (canonical_partition, keep_columns, lengths,
                       pairwise_distances, severity_S, zero_columns)
 
@@ -45,7 +48,9 @@ __all__ = [
     "PAPER_ATTRIBUTES", "RootCauseReport", "SessionReport", "WindowDiff",
     "WindowEntry", "analyze", "analyze_window", "diff_reports",
     "external_root_causes", "fingerprint_arrays", "internal_root_causes",
-    "CACHE_STAGES", "CCRNode", "ExternalReport",
+    "CACHE_STAGES", "CCRNode", "COLLAPSE_AUTO", "COLLAPSE_EXACT",
+    "COLLAPSE_MODES", "COLLAPSE_QUANTIZED", "CollapseCertificate",
+    "ExternalReport", "PreparedWindow",
     "analyze_external", "InternalReport", "analyze_internal",
     "attribute_flags", "crnm", "KMeansResult", "SEVERITY_NAMES", "kmeans_1d",
     "kmeans_1d_reference", "severity_classes", "ClusterResult", "cluster",

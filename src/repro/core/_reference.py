@@ -145,3 +145,11 @@ def optimal_1d_partition_reference(sorted_vals: np.ndarray,
         labels[j:i] = m - 1
         i = j
     return labels
+
+
+def analyze_external_reference(tree, perf):
+    """The full §3.2 CCR/CCCR search driven end-to-end by the retained
+    Python-queue clustering — the oracle the collapse-certificate property
+    tests compare the quantized fast path against (small m only)."""
+    from .external import ExternalAnalyzer   # lazy: avoid an import cycle
+    return ExternalAnalyzer(tree, perf, cluster_fn=cluster_reference).analyze()

@@ -16,14 +16,18 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .optics import (ClusterResult, cluster, cluster_eps, cluster_labels,
-                     labels_to_result, reachability_graph)
+from .optics import (EPS_FRACTION, _ABS_EPS_FLOOR, ClusterResult, cluster,
+                     cluster_eps, cluster_labels, labels_to_result,
+                     reachability_graph, robust_reachability_graph)
 from .regions import RegionTree
-from .vectors import as_matrix, iter_sqdistance_blocks, keep_columns, severity_S
+from .vectors import (as_matrix, ball_group_rows, iter_sqdistance_blocks,
+                      keep_columns, severity_S)
 
 MAX_COMPOSITE_COMBOS = 4096  # safety cap for Step 5 enumeration
 
@@ -33,6 +37,55 @@ MAX_COMPOSITE_COMBOS = 4096  # safety cap for Step 5 enumeration
 # per-call blocked GEMMs (plain `cluster`), trading speed for the row-wise
 # memory bound.
 FAST_PATH_MAX_BYTES = 512 * 2 ** 20
+
+# -- collapse modes ----------------------------------------------------------
+COLLAPSE_EXACT = "exact"          # bit-identical duplicate rows only
+COLLAPSE_QUANTIZED = "quantized"  # eps-margin balls + exactness certificate
+COLLAPSE_AUTO = "auto"            # quantized at pod scale, exact below
+COLLAPSE_MODES = (COLLAPSE_AUTO, COLLAPSE_EXACT, COLLAPSE_QUANTIZED)
+
+#: ``auto`` engages the certified ball collapse only at this many ranks and
+#: above; below it the exact duplicate collapse is already fast and keeps
+#: reports bit-identical to the strict path.
+AUTO_COLLAPSE_MIN_RANKS = 512
+
+#: Ball radius for the quantized collapse, as a fraction of the smallest
+#: positive-norm row's eps (= EPS_FRACTION * norm).  0.25 leaves the
+#: certificate margin 1.1*delta_g + delta_h well under typical |d - eps|
+#: gaps while still absorbing per-rank jitter orders of magnitude smaller
+#: than the data.
+QUANT_RADIUS_FRACTION = 0.25
+
+#: Relative slack added to certificate margins to cover float evaluation of
+#: the margins themselves and the ulp-level wobble of downdated distances
+#: (both are dwarfed by any nonzero delta, but the certificate must never
+#: claim robustness it does not have).
+_CERT_SLACK = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class CollapseCertificate:
+    """Per-window exactness certificate of the rank-collapse fast path.
+
+    ``mode == "exact"`` means every re-clustering ran on bit-identical
+    duplicate groups (or the plain path): the report is bit-identical to
+    the uncollapsed search.  ``mode == "quantized"`` means rank rows were
+    collapsed into balls of measured radius ``delta_max``; every
+    re-clustering either passed the robust eps-margin check
+    (``collapsed_calls``) — whose acceptance *proves* the member-level
+    labels equal the exact ones — or automatically fell back to an exact
+    path (``exact_calls``).  Either way CCRs/CCCRs/cluster labels are the
+    exact search's; the reported severity is a lower bound whose distance
+    from the exact value is at most ``severity_bound``.
+    """
+    mode: str                 # "exact" | "quantized"
+    ranks: int                # m, rows of the perf matrix
+    distinct_rows: int        # groups after bit-identical collapse
+    groups: int               # groups the searches ran over
+    delta_max: float          # largest ball radius (0.0 in exact mode)
+    severity_bound: float     # |S_reported - S_exact| <= severity_bound
+    collapsed_calls: int      # re-clusterings served by certified balls
+    exact_calls: int          # re-clusterings that took an exact path
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +103,7 @@ class ExternalReport:
     clustering: ClusterResult
     ccrs: Tuple[CCRNode, ...]            # all CCRs found, top-down order
     cccrs: Tuple[int, ...]               # region ids that are external bottlenecks
+    certificate: Optional[CollapseCertificate] = None
 
     def render(self, tree: Optional[RegionTree] = None) -> str:
         nm = (lambda r: tree.name(r)) if tree is not None else (lambda r: f"region {r}")
@@ -68,12 +122,110 @@ class ExternalReport:
         return "\n".join(lines)
 
 
+class _SearchBuffers:
+    """Weighted-group re-clustering buffers: the r x r squared-distance
+    matrix of group representatives, materialized once and downdated per
+    call with the dropped columns' squared differences.
+
+    ``delta is None`` is the exact level (bit-identical duplicate groups:
+    identical neighbourhoods under every column subset, labels bit-identical
+    to the uncollapsed clustering).  With ``delta`` set, each group is a
+    ball of that measured radius around its representative (an actual data
+    row) and every call must pass the eps-margin certificate
+    (:func:`~repro.core.optics.robust_reachability_graph`) — radii over the
+    *full* columns upper-bound radii under every column subset (a subset
+    Euclidean norm never exceeds the full one), so one delta per group
+    certifies every downdated call — or ``cluster_live`` returns ``None``
+    and the caller falls back to an exact path.
+
+    Downdate scratch is thread-local so independent region-columns of the
+    search can share one instance read-only.
+    """
+
+    def __init__(self, X: np.ndarray, weights: np.ndarray, gid: np.ndarray,
+                 delta: Optional[np.ndarray]):
+        self.X = X
+        self.weights = weights
+        self.gid = gid
+        self.delta = delta
+        self.r = X.shape[0]
+        self.colsq = X * X
+        self.sq_full = np.sum(self.colsq, axis=1)
+        self.d2_full = np.empty((self.r, self.r))
+        for start, stop, blk in iter_sqdistance_blocks(X):
+            self.d2_full[start:stop] = blk
+        if delta is not None:
+            self.margin = (1.1 * delta[:, None] + delta[None, :]) \
+                * (1.0 + _CERT_SLACK)
+        self._tls = threading.local()
+
+    def _scratch(self) -> Tuple[np.ndarray, np.ndarray]:
+        tls = self._tls
+        if getattr(tls, "diff", None) is None:
+            tls.diff = np.empty((self.r, self.r))
+            tls.work = np.empty((self.r, self.r))
+        return tls.diff, tls.work
+
+    def _live_matrices(self, keep: Sequence[int],
+                       n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Squared distances + squared norms with only ``keep`` columns
+        contributing (same floats as the pre-collapse implementation)."""
+        dropped = [c for c in range(n) if c not in set(keep)]
+        d2 = sq = None
+        if not dropped:
+            d2, sq = self.d2_full, self.sq_full
+        elif len(dropped) <= len(keep):
+            # downdate: subtract each dropped column's squared differences
+            diff, work = self._scratch()
+            d2, sq = work, self.sq_full.copy()
+            for pos, c in enumerate(dropped):
+                col = self.X[:, c]
+                np.subtract(col[:, None], col[None, :], out=diff)
+                np.square(diff, out=diff)
+                if pos == 0:
+                    np.subtract(self.d2_full, diff, out=d2)
+                else:
+                    d2 -= diff
+                sq -= self.colsq[:, c]
+            # cancellation can leave tiny negatives; and when a row's kept
+            # mass is vanishingly small next to what was subtracted, the
+            # leftover junk can exceed that row's eps^2 entirely — rebuild
+            # those (rare) calls exactly instead
+            np.maximum(sq, 0.0, out=sq)
+            if bool(np.any(sq * 1e11 < self.sq_full)):
+                d2 = sq = None
+        if d2 is None:
+            # few live columns, or a downdate too cancellation-prone:
+            # rebuild from scratch (still at group level)
+            live = keep_columns(self.X, sorted(keep))
+            _, d2 = self._scratch()
+            for start, stop, blk in iter_sqdistance_blocks(live):
+                d2[start:stop] = blk
+            sq = np.sum(live * live, axis=1)
+        return d2, sq
+
+    def cluster_live(self, keep: Sequence[int],
+                     n: int) -> Optional[ClusterResult]:
+        """Cluster with only ``keep`` columns contributing; ``None`` when
+        the exactness certificate rejects this call (quantized level only)."""
+        d2, sq = self._live_matrices(keep, n)
+        eps = cluster_eps(np.sqrt(sq))
+        if self.delta is None:
+            reach = reachability_graph([(0, self.r, d2)], eps, exact=False)
+        else:
+            reach = robust_reachability_graph(d2, eps, self.margin)
+            if reach is None:
+                return None
+        glabels = cluster_labels(reach, weights=self.weights)
+        return labels_to_result(glabels[self.gid])
+
+
 class ExternalAnalyzer:
     """Runs the paper's §3.2 algorithm against a RegionTree + perf matrix.
 
     The top-down CCR search re-clusters the same m processes O(regions)
     times, each time with a different set of region columns zeroed out.
-    The default-``cluster`` path exploits two structural facts instead of
+    The default-``cluster`` path exploits structural facts instead of
     paying a fresh m x m GEMM per re-clustering:
 
     * SPMD pod snapshots carry many bit-identical rows (equal shards,
@@ -82,10 +234,25 @@ class ExternalAnalyzer:
       one weighted point each; clustering runs over the r distinct rows
       (``cluster_labels(weights=...)``) and labels are expanded back to
       ranks.
+    * At pod scale rows are rarely bit-identical but often *near*-identical
+      (per-rank jitter on an SPMD workload).  ``collapse`` extends the
+      duplicate collapse to eps-margin balls: distinct rows within
+      ``QUANT_RADIUS_FRACTION`` of the smallest eps of their leader row are
+      collapsed to one weighted representative, and every re-clustering is
+      guarded by an exactness certificate — accepted calls are *provably*
+      label-identical to the exact search, rejected calls fall back to the
+      exact path automatically (see :class:`CollapseCertificate`).
     * Zeroing columns only *removes* additive ``(x_i - x_j)^2`` terms from
       every squared distance, so the full squared-distance matrix is
       materialized once and *downdated* per call with the dropped columns'
       per-column squared differences.
+
+    ``column_workers > 1`` shards the independent region-columns of each
+    search step (Step 2's drop-one tests, Steps 3-4's child substitutions)
+    across a thread executor; the workers share the read-only distance
+    buffers and use thread-local downdate scratch, and results are
+    collected in submission order, so the report is identical to the
+    serial search.
 
     A custom ``cluster_fn`` — or a matrix whose buffers would exceed
     ``FAST_PATH_MAX_BYTES`` — uses the plain per-call path.  The fast path
@@ -95,17 +262,36 @@ class ExternalAnalyzer:
     """
 
     def __init__(self, tree: RegionTree, perf_inclusive,
-                 cluster_fn: Callable[[np.ndarray], ClusterResult] = cluster):
+                 cluster_fn: Callable[[np.ndarray], ClusterResult] = cluster,
+                 *, collapse: str = COLLAPSE_AUTO, column_workers: int = 1):
+        if collapse not in COLLAPSE_MODES:
+            raise ValueError(f"collapse must be one of {COLLAPSE_MODES}, "
+                             f"got {collapse!r}")
+        if column_workers < 1:
+            raise ValueError("column_workers must be >= 1")
         self.tree = tree
         self.perf = as_matrix(perf_inclusive)
         if self.perf.shape[1] != len(tree):
             raise ValueError(
                 f"perf has {self.perf.shape[1]} columns but tree has {len(tree)} regions")
         self.cluster_fn = cluster_fn
+        self.collapse = collapse
+        self.column_workers = column_workers
         self._col: Dict[int, int] = {rid: c for c, rid in enumerate(tree.ids())}
         m, n = self.perf.shape
         self._fast = cluster_fn is cluster and n >= 1
-        self._d2_full: Optional[np.ndarray] = None   # lazy fast-path buffers
+        self._prepared = False
+        self._gid_e: Optional[np.ndarray] = None   # rank -> distinct row
+        self._w_e: Optional[np.ndarray] = None     # distinct-row weights
+        self._X_e: Optional[np.ndarray] = None     # (r_e, n) distinct rows
+        self._ln_e: Optional[np.ndarray] = None    # exact distinct-row norms
+        self._qbuf: Optional[_SearchBuffers] = None   # certified ball level
+        self._ebuf: Optional[_SearchBuffers] = None   # exact dup level (lazy)
+        self._ebuf_over_budget = False
+        self._lock = threading.Lock()
+        self._collapsed_calls = 0
+        self._exact_calls = 0
+        self._pool: Optional[ThreadPoolExecutor] = None
 
     # -- column helpers ----------------------------------------------------
     def _cols(self, rids: Sequence[int]) -> List[int]:
@@ -119,12 +305,18 @@ class ExternalAnalyzer:
         return bool(np.any(self.perf[:, self._col[rid]] > 0))
 
     # -- clustering fast path ----------------------------------------------
-    def _ensure_fast_buffers(self) -> bool:
-        """Collapse duplicate rows and materialize the squared-distance
-        matrix of the distinct rows.  Returns False (and disables the fast
-        path) when the buffers would blow the memory budget."""
-        if self._d2_full is not None:
-            return True
+    def _quantized_requested(self) -> bool:
+        return (self.collapse == COLLAPSE_QUANTIZED
+                or (self.collapse == COLLAPSE_AUTO
+                    and self.perf.shape[0] >= AUTO_COLLAPSE_MIN_RANKS))
+
+    def _ensure_prepared(self) -> bool:
+        """Collapse bit-identical rows (always cheap) and, when the mode
+        asks for it, ball-group the distinct rows; returns False when there
+        is nothing to run the group-level search on."""
+        if self._prepared:
+            return self._gid_e is not None
+        self._prepared = True
         X = self.perf
         m = X.shape[0]
         if m == 0:
@@ -146,118 +338,181 @@ class ExternalAnalyzer:
         # is anchor rank order (what the sequential expansion visits)
         relabel = np.empty(r, dtype=np.int64)
         relabel[np.argsort(first, kind="stable")] = np.arange(r)
-        self._gid = relabel[gid]
+        self._gid_e = relabel[gid]
         reps = np.sort(first)               # rank of each group's first member
-        if 3 * 8 * r * r > FAST_PATH_MAX_BYTES:
-            self._fast = False
-            return False
-        self._weights = np.bincount(self._gid).astype(np.float64)
-        self._X = X[reps]                   # (r, n) distinct rows
-        self._colsq = self._X * self._X
-        self._sq_full = np.sum(self._colsq, axis=1)
-        self._d2_full = np.empty((r, r))
-        for start, stop, blk in iter_sqdistance_blocks(self._X):
-            self._d2_full[start:stop] = blk
-        self._diff = np.empty((r, r))
-        self._work = np.empty((r, r))
+        self._w_e = np.bincount(self._gid_e).astype(np.float64)
+        self._X_e = X[reps]                 # (r_e, n) distinct rows
+        self._ln_e = np.sqrt(np.sum(self._X_e * self._X_e, axis=1))
+        if self._quantized_requested() and r > 1:
+            self._build_quantized(r)
         return True
+
+    def _build_quantized(self, r_e: int) -> None:
+        """Ball-group the distinct rows; keeps ``_qbuf`` unset when the
+        grouping would not pay for itself (no reduction, radius degenerate,
+        too many balls, or buffers over budget) — callers then use the
+        exact level, so an ineffective grouping costs only its one sweep."""
+        pos = self._ln_e[self._ln_e > 0.0]
+        if not pos.size:
+            return                 # all-zero rows are bit-identical anyway
+        radius = QUANT_RADIUS_FRACTION * max(
+            EPS_FRACTION * float(np.min(pos)), _ABS_EPS_FLOOR)
+        max_groups = min(max(64, r_e // 8), 4096)
+        grouped = ball_group_rows(self._X_e, radius, max_groups=max_groups)
+        if grouped is None:
+            return
+        qgid_e, leaders, delta = grouped
+        r_q = len(leaders)
+        if r_q >= r_e or 3 * 8 * r_q * r_q > FAST_PATH_MAX_BYTES:
+            return
+        self._qbuf = _SearchBuffers(self._X_e[leaders],
+                                    np.bincount(qgid_e,
+                                                weights=self._w_e),
+                                    qgid_e[self._gid_e], delta)
+
+    def _exact_buffers(self) -> Optional[_SearchBuffers]:
+        """The exact duplicate-collapse level, built lazily (under the
+        quantized mode it only materializes on the first certificate
+        rejection) and subject to the memory budget."""
+        if self._ebuf is None and not self._ebuf_over_budget:
+            with self._lock:
+                if self._ebuf is None and not self._ebuf_over_budget:
+                    r = self._X_e.shape[0]
+                    if 3 * 8 * r * r > FAST_PATH_MAX_BYTES:
+                        self._ebuf_over_budget = True
+                    else:
+                        self._ebuf = _SearchBuffers(
+                            self._X_e, self._w_e, self._gid_e, None)
+        return self._ebuf
+
+    def _count(self, collapsed: bool) -> None:
+        with self._lock:
+            if collapsed:
+                self._collapsed_calls += 1
+            else:
+                self._exact_calls += 1
 
     def _cluster_live(self, live_rids: Sequence[int]) -> ClusterResult:
         """Cluster with only ``live_rids``'s columns contributing."""
-        if not self._fast or not self._ensure_fast_buffers():
+        if not self._fast or not self._ensure_prepared():
             return self.cluster_fn(self._vectors(live_rids))
         n = self.perf.shape[1]
-        r = self._X.shape[0]
-        keep = set(self._cols(live_rids))
-        dropped = [c for c in range(n) if c not in keep]
-        d2 = sq = None
-        if not dropped:
-            d2, sq = self._d2_full, self._sq_full
-        elif len(dropped) <= len(keep):
-            # downdate: subtract each dropped column's squared differences
-            d2, sq = self._work, self._sq_full.copy()
-            for pos, c in enumerate(dropped):
-                col = self._X[:, c]
-                np.subtract(col[:, None], col[None, :], out=self._diff)
-                np.square(self._diff, out=self._diff)
-                if pos == 0:
-                    np.subtract(self._d2_full, self._diff, out=d2)
-                else:
-                    d2 -= self._diff
-                sq -= self._colsq[:, c]
-            # cancellation can leave tiny negatives; and when a row's kept
-            # mass is vanishingly small next to what was subtracted, the
-            # leftover junk can exceed that row's eps^2 entirely — rebuild
-            # those (rare) calls exactly instead
-            np.maximum(sq, 0.0, out=sq)
-            if bool(np.any(sq * 1e11 < self._sq_full)):
-                d2 = sq = None
-        if d2 is None:
-            # few live columns, or a downdate too cancellation-prone:
-            # rebuild from scratch (still at group level)
-            live = keep_columns(self._X, sorted(keep))
-            d2 = self._work
-            for start, stop, blk in iter_sqdistance_blocks(live):
-                d2[start:stop] = blk
-            sq = np.sum(live * live, axis=1)
-        eps = cluster_eps(np.sqrt(sq))
-        reach = reachability_graph([(0, r, d2)], eps, exact=False)
-        glabels = cluster_labels(reach, weights=self._weights)
-        return labels_to_result(glabels[self._gid])
+        keep = sorted(self._cols(live_rids))
+        if self._qbuf is not None:
+            res = self._qbuf.cluster_live(keep, n)
+            if res is not None:
+                self._count(collapsed=True)
+                return res
+        self._count(collapsed=False)
+        ebuf = self._exact_buffers()
+        if ebuf is not None:
+            return ebuf.cluster_live(keep, n)
+        return self.cluster_fn(self._vectors(live_rids))
 
-    def _severity(self) -> float:
-        """Paper Eq. 2 from the group-level buffers when available (pairs
-        within a duplicate group have distance 0, so the max lives on the
-        distinct-row matrix and the min norm on the distinct rows)."""
+    def _map_cluster(self, rid_lists: Sequence[Sequence[int]]
+                     ) -> List[ClusterResult]:
+        """``_cluster_live`` over independent column sets — the unit the
+        column executor shards; results keep submission order."""
+        if self._pool is None or len(rid_lists) <= 1:
+            return [self._cluster_live(rl) for rl in rid_lists]
+        return list(self._pool.map(self._cluster_live, rid_lists))
+
+    def _severity_and_bound(self) -> Tuple[float, float]:
+        """Paper Eq. 2 from the group-level buffers when available.  Under
+        the quantized collapse the max pairwise distance is only known to
+        ball resolution: representatives are actual rows, so the group max
+        is a true lower bound, and inflating every pair by its radii bounds
+        the true max from above; the min norm is exact either way (taken
+        over the distinct rows, O(m n) total)."""
         m = self.perf.shape[0]
         if m < 2:
-            return 0.0
-        if not self._fast or not self._ensure_fast_buffers():
-            return severity_S(self.perf)
-        max_dist = float(np.sqrt(max(0.0, float(np.max(self._d2_full)))))
-        ln = np.sqrt(self._sq_full)
+            return 0.0, 0.0
+        if not self._fast or not self._ensure_prepared():
+            return severity_S(self.perf), 0.0
+        if self._qbuf is not None:
+            q = self._qbuf
+            dmat = np.sqrt(np.maximum(q.d2_full, 0.0))
+            max_dist = float(np.max(dmat))
+            upper = float(np.max(dmat + q.delta[:, None] + q.delta[None, :]))
+            min_len = float(np.min(self._ln_e))
+            if min_len <= 0.0:
+                min_len = float(np.dot(self._w_e, self._ln_e) / m) or 1.0
+            return max_dist / min_len, (upper - max_dist) / min_len
+        ebuf = self._exact_buffers()
+        if ebuf is None:
+            return severity_S(self.perf), 0.0
+        max_dist = float(np.sqrt(max(0.0, float(np.max(ebuf.d2_full)))))
+        ln = np.sqrt(ebuf.sq_full)
         min_len = float(np.min(ln))
         if min_len <= 0.0:
-            min_len = float(np.dot(self._weights, ln) / m) or 1.0
-        return max_dist / min_len
+            min_len = float(np.dot(ebuf.weights, ln) / m) or 1.0
+        return max_dist / min_len, 0.0
+
+    def _certificate(self, severity_bound: float
+                     ) -> Optional[CollapseCertificate]:
+        if not self._fast or self._gid_e is None:
+            return None
+        r_e = int(self._X_e.shape[0])
+        if self._qbuf is not None:
+            return CollapseCertificate(
+                mode=COLLAPSE_QUANTIZED, ranks=int(self.perf.shape[0]),
+                distinct_rows=r_e, groups=int(self._qbuf.r),
+                delta_max=float(np.max(self._qbuf.delta)),
+                severity_bound=severity_bound,
+                collapsed_calls=self._collapsed_calls,
+                exact_calls=self._exact_calls)
+        return CollapseCertificate(
+            mode=COLLAPSE_EXACT, ranks=int(self.perf.shape[0]),
+            distinct_rows=r_e, groups=r_e, delta_max=0.0,
+            severity_bound=0.0, collapsed_calls=0,
+            exact_calls=self._exact_calls)
 
     # -- main entry ---------------------------------------------------------
     def analyze(self) -> ExternalReport:
         base = self._cluster_live(list(self._col))
-        S = self._severity()
+        S, S_bound = self._severity_and_bound()
         if base.n_clusters <= 1:
-            return ExternalReport(False, S, base, (), ())
+            return ExternalReport(False, S, base, (), (),
+                                  self._certificate(S_bound))
 
         ccrs: List[CCRNode] = []
         cccrs: List[int] = []
 
-        level1 = [r for r in self.tree.at_depth(1) if self._active(r)]
-        ref = self._cluster_live(level1)
-        one_ccrs = self._find_level1_ccrs(level1, ref)
+        if self.column_workers > 1:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.column_workers,
+                thread_name_prefix="perfdbg-column")
+        try:
+            level1 = [r for r in self.tree.at_depth(1) if self._active(r)]
+            ref = self._cluster_live(level1)
+            one_ccrs = self._find_level1_ccrs(level1, ref)
 
-        if one_ccrs:
-            for rid in one_ccrs:
-                ccrs.append(CCRNode(rid, 1, False))
-                context = [r for r in level1 if r != rid]
-                self._descend(rid, context, ref, ccrs, cccrs)
-        else:
-            # Step 5: composite depth-1 regions
-            self._composite_search(level1, ccrs, cccrs)
+            if one_ccrs:
+                for rid in one_ccrs:
+                    ccrs.append(CCRNode(rid, 1, False))
+                    context = [r for r in level1 if r != rid]
+                    self._descend(rid, context, ref, ccrs, cccrs)
+            else:
+                # Step 5: composite depth-1 regions
+                self._composite_search(level1, ccrs, cccrs)
+        finally:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+                self._pool = None
 
         # mark CCCR flags on the CCR list
         marked = tuple(
             dataclasses.replace(node, is_cccr=node.rid in cccrs) for node in ccrs)
-        return ExternalReport(True, S, base, marked, tuple(dict.fromkeys(cccrs)))
+        return ExternalReport(True, S, base, marked, tuple(dict.fromkeys(cccrs)),
+                              self._certificate(S_bound))
 
     # -- Step 2 -------------------------------------------------------------
     def _find_level1_ccrs(self, level1: Sequence[int],
                           ref: ClusterResult) -> List[int]:
-        found = []
-        for rid in level1:
-            test = self._cluster_live([r for r in level1 if r != rid])
-            if not test.same_output(ref):
-                found.append(rid)
-        return found
+        tests = self._map_cluster(
+            [[r for r in level1 if r != rid] for rid in level1])
+        return [rid for rid, test in zip(level1, tests)
+                if not test.same_output(ref)]
 
     # -- Steps 3-4 ------------------------------------------------------------
     def _descend(self, p: int, context: Sequence[int], ref: ClusterResult,
@@ -269,11 +524,10 @@ class ExternalAnalyzer:
         if not children:
             cccrs.append(p)
             return
-        child_ccrs = []
-        for k in children:
-            test = self._cluster_live(list(context) + [k])
-            if test.same_output(ref):
-                child_ccrs.append(k)
+        tests = self._map_cluster(
+            [list(context) + [k] for k in children])
+        child_ccrs = [k for k, test in zip(children, tests)
+                      if test.same_output(ref)]
         if not child_ccrs:
             cccrs.append(p)
             return
@@ -299,11 +553,10 @@ class ExternalAnalyzer:
                 if test.same_output(ref):
                     continue
                 # composite region found; descend into each member as a child
-                member_ccrs = []
-                for k in combo:
-                    t2 = self._cluster_live(singles + [k])
-                    if t2.same_output(ref):
-                        member_ccrs.append(k)
+                member_tests = self._map_cluster(
+                    [singles + [k] for k in combo])
+                member_ccrs = [k for k, t2 in zip(combo, member_tests)
+                               if t2.same_output(ref)]
                 if not member_ccrs:
                     # the combination only acts jointly: every member is a CCCR
                     for k in combo:
@@ -321,6 +574,9 @@ class ExternalAnalyzer:
 
 
 def analyze_external(tree: RegionTree, perf_inclusive,
-                     cluster_fn: Callable[[np.ndarray], ClusterResult] = cluster
-                     ) -> ExternalReport:
-    return ExternalAnalyzer(tree, perf_inclusive, cluster_fn).analyze()
+                     cluster_fn: Callable[[np.ndarray], ClusterResult] = cluster,
+                     *, collapse: str = COLLAPSE_AUTO,
+                     column_workers: int = 1) -> ExternalReport:
+    return ExternalAnalyzer(tree, perf_inclusive, cluster_fn,
+                            collapse=collapse,
+                            column_workers=column_workers).analyze()

@@ -28,7 +28,7 @@ constant factors and is provably tie-exact.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -56,13 +56,16 @@ class KMeansResult:
         return "\n".join(lines)
 
 
-def _layer1(pre: np.ndarray, pre2: np.ndarray, n: int) -> np.ndarray:
+def _layer1(pre: np.ndarray, pre2: np.ndarray, n: int,
+            cw: Optional[np.ndarray] = None) -> np.ndarray:
     """D[1][i] = sse(0, i): one cluster covering sorted[0..i-1].
 
     Matches the reference's first layer exactly: there j=0 is the only
-    finite candidate and ``0.0 + sse == sse``.
+    finite candidate and ``0.0 + sse == sse``.  ``cw`` is the cumulative
+    point-weight prefix (weighted inputs); by default every point weighs 1
+    and the divisor is the plain count — the same floats as before.
     """
-    i = np.arange(n + 1, dtype=np.float64)
+    i = np.arange(n + 1, dtype=np.float64) if cw is None else cw
     with np.errstate(invalid="ignore", divide="ignore"):
         s = pre - pre[0]
         out = pre2 - pre2[0] - s * s / i
@@ -71,7 +74,8 @@ def _layer1(pre: np.ndarray, pre2: np.ndarray, n: int) -> np.ndarray:
 
 
 def _dense_layer(pre: np.ndarray, pre2: np.ndarray, d_prev: np.ndarray,
-                 m: int, n: int) -> Tuple[np.ndarray, np.ndarray]:
+                 m: int, n: int, cw: Optional[np.ndarray] = None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
     """One DP layer via (rows x candidates) cost matrices + row argmin.
 
     Bit-identical to the reference row loop: the cost expression is the
@@ -89,7 +93,10 @@ def _dense_layer(pre: np.ndarray, pre2: np.ndarray, d_prev: np.ndarray,
     chunk = max(1, (_DENSE_MAX_N * _DENSE_MAX_N) // (n + 1))
     for lo in range(m, n + 1, chunk):
         i = np.arange(lo, min(lo + chunk, n + 1))
-        cnt = i[:, None] - j[None, :]
+        if cw is None:
+            cnt = i[:, None] - j[None, :]
+        else:
+            cnt = cw[i][:, None] - cw[None, :]
         valid = (j[None, :] >= m - 1) & (cnt > 0)
         with np.errstate(invalid="ignore", divide="ignore"):
             s = pre[i][:, None] - pre[None, :]
@@ -185,6 +192,68 @@ def _optimal_1d_partition(sorted_vals: np.ndarray, k: int) -> np.ndarray:
     return labels
 
 
+def _optimal_1d_partition_weighted(sorted_vals: np.ndarray,
+                                   weights: np.ndarray, k: int) -> np.ndarray:
+    """Weighted exact 1-D k-means DP over *distinct, sorted* values: point
+    ``i`` stands for ``weights[i]`` identical observations.  This is the
+    collapsed form of running the unweighted DP on the weight-expanded
+    array — the SSE of an interval depends only on the weighted prefix
+    sums, so the transition is the same formula with counts replaced by
+    cumulative weights.  Always routed through the dense layer: weighted
+    points *are* collapsed duplicates, exactly the tie-unsafe case the
+    divide-and-conquer path refuses (see ``_optimal_1d_partition``)."""
+    n = len(sorted_vals)
+    w = np.asarray(weights, dtype=np.float64)
+    pre = np.concatenate([[0.0], np.cumsum(w * sorted_vals)])
+    pre2 = np.concatenate([[0.0], np.cumsum(w * sorted_vals ** 2)])
+    cw = np.concatenate([[0.0], np.cumsum(w)])
+    d_prev = _layer1(pre, pre2, n, cw)
+    args = [np.zeros(n + 1, dtype=np.int64)]      # layer 1: j == 0
+    for m in range(2, k + 1):
+        d_prev, arg_m = _dense_layer(pre, pre2, d_prev, m, n, cw)
+        args.append(arg_m)
+    labels = np.zeros(n, dtype=np.int64)
+    i = n
+    for m in range(k, 1, -1):
+        j = int(args[m - 1][i])
+        labels[j:i] = m - 1
+        i = j
+    return labels
+
+
+def _kmeans_1d_weighted(values: Sequence[float], weights: Sequence[float],
+                        k: int) -> KMeansResult:
+    """Weighted k-means body: merge equal values (their weights add — one
+    weighted point can only carry one label), run the weighted DP, expand
+    labels back, and rescale sparse class counts exactly like the
+    unweighted path."""
+    vals = np.asarray(values, dtype=np.float64)
+    w = np.asarray(weights, dtype=np.float64)
+    if vals.ndim != 1 or w.shape != vals.shape:
+        raise ValueError("kmeans_1d weights must be 1-D and match values")
+    if np.any(w <= 0):
+        raise ValueError("kmeans_1d weights must be positive")
+    n = len(vals)
+    if n == 0:
+        return KMeansResult((), ())
+    uniq, inv = np.unique(vals, return_inverse=True)
+    uw = np.zeros(len(uniq))
+    np.add.at(uw, inv, w)
+    k_eff = int(min(k, len(uniq)))
+    if k_eff == 1:
+        return KMeansResult(tuple([0] * n), (float(uniq[0]),))
+    lab_u = _optimal_1d_partition_weighted(uniq, uw, k_eff)
+    labels = lab_u[inv]
+    centroids = np.asarray(
+        [float(np.dot(uw[lab_u == c], uniq[lab_u == c]) / np.sum(uw[lab_u == c]))
+         for c in range(k_eff)])
+    if k_eff < k:
+        scale = (k - 1) / max(k_eff - 1, 1)
+        labels = np.round(labels * scale).astype(np.int64)
+    return KMeansResult(tuple(int(l) for l in labels),
+                        tuple(float(c) for c in centroids))
+
+
 def _kmeans_1d_with(partition_fn, values: Sequence[float],
                     k: int) -> KMeansResult:
     """Shared k-means body (validation, k_eff handling, centroid + severity
@@ -214,14 +283,23 @@ def _kmeans_1d_with(partition_fn, values: Sequence[float],
                         tuple(float(c) for c in centroids))
 
 
-def kmeans_1d(values: Sequence[float], k: int = N_SEVERITY) -> KMeansResult:
+def kmeans_1d(values: Sequence[float], k: int = N_SEVERITY,
+              weights: Optional[Sequence[float]] = None) -> KMeansResult:
     """Exact 1-D k-means.  If there are fewer distinct values than ``k``,
     each distinct value becomes its own cluster and labels are rescaled onto
     the k-point severity scale (so the top value is always 'very high').
 
+    ``weights`` (positive, same length as ``values``) is the
+    weighted-representative handoff for collapsed inputs: value ``i``
+    stands for ``weights[i]`` identical observations, and the result
+    matches running the unweighted DP on the weight-expanded array —
+    labels per representative, centroids as weighted means.
+
     The exact DP needs no iteration cap — the former ``max_iter`` parameter
     (a Lloyd-era leftover that was never read) is gone.
     """
+    if weights is not None:
+        return _kmeans_1d_weighted(values, weights, k)
     return _kmeans_1d_with(_optimal_1d_partition, values, k)
 
 
@@ -233,6 +311,8 @@ def kmeans_1d_reference(values: Sequence[float],
     return _kmeans_1d_with(optimal_1d_partition_reference, values, k)
 
 
-def severity_classes(values: Sequence[float]) -> KMeansResult:
-    """Paper's 5-class severity classification."""
-    return kmeans_1d(values, k=N_SEVERITY)
+def severity_classes(values: Sequence[float],
+                     weights: Optional[Sequence[float]] = None) -> KMeansResult:
+    """Paper's 5-class severity classification (optionally over weighted
+    representatives of collapsed groups)."""
+    return kmeans_1d(values, k=N_SEVERITY, weights=weights)

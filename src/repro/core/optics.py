@@ -102,6 +102,42 @@ def reachability_graph(sq_blocks, eps: np.ndarray,
     return reach
 
 
+def robust_reachability_graph(d2: np.ndarray, eps: np.ndarray,
+                              margin: np.ndarray) -> Optional[np.ndarray]:
+    """Certified eps-reachability graph for collapsed (approximate) points.
+
+    ``d2`` holds squared distances between group representatives, ``eps``
+    each representative's row threshold, and ``margin[g, h]`` a bound on how
+    far the member-level comparison ``dist(p, q) < eps_p`` (any p in group
+    g, any q in group h) can drift from the representative-level one — for
+    balls of radius ``delta`` around actual data rows that is
+    ``1.1 * delta[g] + delta[h]`` (the distance moves by at most
+    ``delta[g] + delta[h]`` and the anchor's eps, 10% of a 1-Lipschitz
+    norm, by at most ``0.1 * delta[g]``).
+
+    Returns the boolean graph when *every* pair is decided robustly:
+    ``d >= eps + margin`` (no member pair has the edge) or ``0 < eps -
+    margin`` and ``d < eps - margin`` (every member pair has it).  The
+    diagonal doubles as the in-group condition: ``d2[g, g] == 0`` is a
+    robust edge iff ``eps[g] > margin[g, g]`` (= ``2.1 * delta[g]``), i.e.
+    the ball is provably an eps-clique of its own members.  Returns
+    ``None`` as soon as one pair falls inside the band — a member edge
+    could then differ from its representative edge and the caller must
+    take the exact path.
+
+    All comparisons run in the squared domain (no r x r sqrt); ``d2`` may
+    carry tiny negatives from downdating cancellation, which land on the
+    robust-edge side exactly as a true zero distance would.
+    """
+    eps_col = eps[:, None]
+    lo = eps_col - margin
+    hi = eps_col + margin
+    edge = (lo > 0.0) & (d2 < lo * lo)
+    if bool(np.all(edge | (d2 >= hi * hi))):
+        return edge
+    return None
+
+
 def cluster_labels(reach: np.ndarray, count_threshold: int = COUNT_THRESHOLD,
                    weights: Optional[np.ndarray] = None) -> np.ndarray:
     """Density closure over a reachability graph, vectorized: returns the

@@ -1,42 +1,57 @@
-"""Off-critical-path analysis: AnalysisSession behind a worker thread
+"""Off-critical-path analysis: AnalysisSession behind a worker pool
 (core layer: threading only — no jax, no transport; the drivers own both).
 
 The paper's pipeline is cheap (clustering over an m x n matrix), but "cheap"
 is still synchronous work on the training step loop.  ``AsyncAnalysisSession``
-moves ingestion onto a single worker thread behind a bounded snapshot queue,
-so a windowed run pays only the ``snapshot()`` copy per window — the paper's
+moves ingestion onto ``workers`` threads behind a bounded snapshot queue, so
+a windowed run pays only the ``snapshot()`` copy per window — the paper's
 125*n*m-byte contract is exactly what makes that copy affordable.
 
 Contract:
 
 * ``submit`` / ``submit_recorder`` enqueue a frozen window.  Queue full?
-  ``backpressure`` decides: ``"block"`` waits for the worker (analysis never
+  ``backpressure`` decides: ``"block"`` waits for a worker (analysis never
   loses a window; the step loop may stall), ``"drop_oldest"`` evicts the
   oldest *pending* window (the step loop never stalls; ``dropped`` counts
-  the losses).  Windows are analyzed strictly in submission order, so the
-  resulting ``SessionReport`` is identical to the synchronous session's.
+  the losses).  Windows are *assembled* strictly in submission order
+  regardless of worker count, so the resulting ``SessionReport`` is
+  byte-identical to the synchronous session's.
 * ``drain()`` blocks until everything submitted so far is analyzed and
   returns the current ``SessionReport``.
-* ``close()`` drains, stops the worker, and returns the final report; the
+* ``close()`` drains, stops the workers, and returns the final report; the
   session is also a context manager (``with AsyncAnalysisSession(t) as s:``).
-* A crash in the worker (analysis, the policy engine, or the ``on_window``
-  callback) is captured and re-raised from the next ``submit``/``drain``/
-  ``close``.
+* A crash in a worker (analysis, the policy engine, or the ``on_window``
+  callback) is captured and re-raised — with the original exception as the
+  cause — from the next ``submit``/``drain``/``close``.
 * A ``policy_engine`` (``core.policy.PolicyEngine``) attached at
-  construction runs on the worker thread after each window is analyzed —
-  *before* ``on_window``, so the callback can print this window's
+  construction runs during in-order assembly after each window is analyzed
+  — *before* ``on_window``, so the callback can print this window's
   decisions.  Fired actions accumulate and are collected with
   ``take_actions()``; after ``drain()`` returns, every action from every
   window submitted before the drain has been collected or is collectable.
-  Because windows are analyzed strictly in submission order, the engine
-  sees the identical entry stream the synchronous driver would feed it —
-  policy decisions are deterministic across the two paths.
+  Because assembly is strictly in submission order, the engine sees the
+  identical entry stream the synchronous driver would feed it — policy
+  decisions are deterministic across the two paths *and across worker
+  counts*.
+
+Worker pool (``workers > 1``): each worker claims the next queued window
+and runs the thread-safe analysis stage
+(:meth:`~repro.core.session.AnalysisSession.prepare_snapshot`) concurrently
+with the others; a single in-order assembler then applies
+:meth:`~repro.core.session.AnalysisSession.ingest_prepared`, the policy
+engine, and ``on_window`` strictly by submission sequence (whichever worker
+completes the next-due window drives assembly until it runs dry).
+Incremental reuse stays on: concurrent preparers fingerprint against the
+latest *assembled* window's memo — possibly stale, never wrong, since reuse
+only substitutes results for fingerprint-equal inputs.  With ``workers == 1``
+the worker ingests directly via ``ingest_snapshot`` (the pre-pool path, same
+hooks, same cache-hit pattern).
 """
 from __future__ import annotations
 
 import collections
 import threading
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from .regions import RegionTree
 from .session import AnalysisSession, SessionReport, WindowEntry
@@ -45,18 +60,36 @@ BLOCK = "block"
 DROP_OLDEST = "drop_oldest"
 BACKPRESSURE_POLICIES = (BLOCK, DROP_OLDEST)
 
+#: assembler sentinel for a submission sequence evicted by ``drop_oldest``
+_DROPPED = object()
+
 
 class PipelineClosed(RuntimeError):
     """submit() after close()."""
 
 
-class AsyncAnalysisSession:
-    """Bounded-queue, single-worker wrapper around :class:`AnalysisSession`.
+class _PrepareFailure:
+    """A worker's analysis stage raised; assembled in order as a failure."""
 
-    ``on_window`` (optional) runs on the worker thread after each window is
-    analyzed — the place for progress lines or window-adaptive policies.
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
+class AsyncAnalysisSession:
+    """Bounded-queue worker pool around :class:`AnalysisSession`.
+
+    ``on_window`` (optional) runs on a worker thread after each window is
+    assembled — the place for progress lines or window-adaptive policies.
     Access the wrapped session's state only via ``drain()``/``close()``
-    results (or inside ``on_window``); anything else races the worker.
+    results (or inside ``on_window``); anything else races the workers.
+
+    ``workers`` sizes the pool sharding *independent windows*; submission
+    order is preserved end to end (see the module docstring).  With a
+    custom ``session`` subclass note the hook difference: the pool drives
+    ``prepare_snapshot``/``ingest_prepared``, while ``workers == 1`` drives
+    ``ingest_snapshot``.
     """
 
     def __init__(self, tree: RegionTree, *, keep_windows: Optional[int] = None,
@@ -64,48 +97,74 @@ class AsyncAnalysisSession:
                  on_window: Optional[Callable[[WindowEntry], None]] = None,
                  session: Optional[AnalysisSession] = None,
                  policy_engine=None, reuse: bool = True,
-                 internal_gate_s: Optional[float] = None):
+                 internal_gate_s: Optional[float] = None,
+                 workers: int = 1, collapse: Optional[str] = None,
+                 column_workers: Optional[int] = None):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(f"backpressure must be one of "
                              f"{BACKPRESSURE_POLICIES}, got {backpressure!r}")
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
         if session is not None and (keep_windows is not None
                                     or not reuse
-                                    or internal_gate_s is not None):
+                                    or internal_gate_s is not None
+                                    or collapse is not None
+                                    or column_workers is not None):
             raise ValueError(
-                "session= conflicts with keep_windows/reuse/internal_gate_s "
-                "— configure the AnalysisSession you pass in instead")
+                "session= conflicts with keep_windows/reuse/internal_gate_s/"
+                "collapse/column_workers — configure the AnalysisSession you "
+                "pass in instead")
         self.tree = tree
-        self._session = session if session is not None \
-            else AnalysisSession(tree, keep_windows, reuse=reuse,
-                                 internal_gate_s=internal_gate_s)
+        if session is not None:
+            self._session = session
+        else:
+            kw = {}
+            if collapse is not None:
+                kw["collapse"] = collapse
+            if column_workers is not None:
+                kw["column_workers"] = column_workers
+            self._session = AnalysisSession(tree, keep_windows, reuse=reuse,
+                                            internal_gate_s=internal_gate_s,
+                                            **kw)
         self._max_queue = max_queue
         self._policy = backpressure
         self._on_window = on_window
         self._engine = policy_engine
+        self._workers_n = workers
         self._actions: List = []   # fired, not yet taken (guarded by _cv)
         self._q: collections.deque = collections.deque()
         self._cv = threading.Condition()
         self._submitted = 0      # windows accepted into the queue
-        self._done = 0           # windows analyzed, dropped, or failed
+        self._done = 0           # windows assembled, dropped, or failed
         self._dropped = 0
-        self._failed = 0         # ingest (or on_window) raised
+        self._failed = 0         # analysis (or ingest) raised
         self._closed = False
         self._error: Optional[BaseException] = None
-        self._worker = threading.Thread(
-            target=self._run, name="perfdbg-analysis", daemon=True)
-        self._worker.start()
+        # pool state (guarded by _cv)
+        self._results: Dict[int, object] = {}  # seq -> PreparedWindow/_PrepareFailure/_DROPPED
+        self._next_assemble = 0   # next submission sequence due for assembly
+        self._assembling = False  # one assembler at a time
+        self._inflight = 0        # claimed but result not yet posted
+        self._latest_memo = None  # memo of the last assembled window
+        run = self._run_single if workers == 1 else self._run_pooled
+        self._threads = [
+            threading.Thread(target=run, name=f"perfdbg-analysis-{i}",
+                             daemon=True)
+            for i in range(workers)]
+        for t in self._threads:
+            t.start()
 
-    # -- worker --------------------------------------------------------------
-    def _run(self) -> None:
+    # -- single-worker path (the pre-pool loop, kept verbatim) ---------------
+    def _run_single(self) -> None:
         while True:
             with self._cv:
                 while not self._q and not self._closed:
                     self._cv.wait()
                 if not self._q:          # closed and fully drained
                     return
-                snap, label = self._q.popleft()
+                _, snap, label = self._q.popleft()
                 self._cv.notify_all()    # a blocked producer may proceed
             err = None
             ingested = False
@@ -130,6 +189,97 @@ class AsyncAnalysisSession:
                 self._done += 1
                 self._cv.notify_all()
 
+    # -- pooled path ---------------------------------------------------------
+    def _run_pooled(self) -> None:
+        while True:
+            self._assemble_ready()
+            with self._cv:
+                claimed = None
+                while True:
+                    if self._q:
+                        claimed = self._q.popleft()
+                        self._inflight += 1
+                        memo = self._latest_memo
+                        self._cv.notify_all()   # a blocked producer may proceed
+                        break
+                    if self._can_assemble():
+                        break                    # go run the assembler
+                    if (self._closed and not self._inflight
+                            and not self._results):
+                        return
+                    self._cv.wait()
+            if claimed is None:
+                continue
+            seq, snap, label = claimed
+            try:
+                outcome: object = self._session.prepare_snapshot(
+                    snap, label=label, memo=memo)
+            except BaseException as e:
+                outcome = _PrepareFailure(e)
+            with self._cv:
+                self._results[seq] = outcome
+                self._inflight -= 1
+                self._cv.notify_all()
+
+    def _can_assemble(self) -> bool:
+        return not self._assembling and self._next_assemble in self._results
+
+    def _assemble_ready(self) -> None:
+        """Assemble every consecutive completed window starting at the next
+        due sequence.  One assembler at a time; re-checks after releasing
+        the flag so a result posted during the hand-off is never stranded."""
+        while True:
+            with self._cv:
+                if not self._can_assemble():
+                    return
+                self._assembling = True
+            try:
+                while True:
+                    with self._cv:
+                        item = self._results.pop(self._next_assemble, None)
+                        if item is None:
+                            break
+                        self._next_assemble += 1
+                    if item is not _DROPPED:   # drops were counted at eviction
+                        self._assemble_one(item)
+            finally:
+                with self._cv:
+                    self._assembling = False
+                    self._cv.notify_all()
+
+    def _assemble_one(self, outcome) -> None:
+        err: Optional[BaseException] = None
+        failed = False
+        fired = []
+        entry = None
+        if isinstance(outcome, _PrepareFailure):
+            err, failed = outcome.error, True
+        else:
+            try:
+                entry = self._session.ingest_prepared(outcome)
+            except BaseException as e:
+                err, failed = e, True
+            else:
+                try:
+                    if self._engine is not None:
+                        fired = self._engine.observe(entry, self._session)
+                    if self._on_window is not None:
+                        self._on_window(entry)
+                except BaseException as e:   # ingested: analyzed, but surface
+                    err = e
+        with self._cv:
+            if fired:
+                self._actions.extend(fired)
+            if err is not None:
+                if failed:
+                    self._failed += 1
+                if self._error is None:
+                    self._error = err
+            if entry is not None:
+                self._latest_memo = self._session.latest_memo
+            self._done += 1
+            self._cv.notify_all()
+
     def _raise_pending(self) -> None:
         if self._error is not None:
             raise RuntimeError("analysis worker failed") from self._error
@@ -150,10 +300,13 @@ class AsyncAnalysisSession:
                     raise PipelineClosed("pipeline closed while blocked")
             else:
                 while len(self._q) >= self._max_queue:
-                    self._q.popleft()
+                    seq, _, _ = self._q.popleft()
                     self._dropped += 1
                     self._done += 1
-            self._q.append((snap, label))
+                    if self._workers_n > 1:
+                        # the assembler must skip this sequence
+                        self._results[seq] = _DROPPED
+            self._q.append((self._submitted, snap, label))
             self._submitted += 1
             self._cv.notify_all()
 
@@ -177,20 +330,21 @@ class AsyncAnalysisSession:
         return self._session.report()
 
     def close(self, timeout: Optional[float] = None) -> SessionReport:
-        """Drain, stop the worker, and return the final report.  Idempotent;
-        the backlog is fully analyzed before the worker exits."""
+        """Drain, stop the workers, and return the final report.  Idempotent;
+        the backlog is fully analyzed before the workers exit."""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
         report = self.drain(timeout)
-        self._worker.join(timeout)
+        for t in self._threads:
+            t.join(timeout)
         return report
 
     def __enter__(self) -> "AsyncAnalysisSession":
         return self
 
     def __exit__(self, *exc) -> None:
-        # on an exception unwind, still stop the worker but let the original
+        # on an exception unwind, still stop the workers but let the original
         # error surface rather than a secondary drain failure
         try:
             self.close(timeout=None if exc[0] is None else 5.0)
@@ -213,7 +367,7 @@ class AsyncAnalysisSession:
     def policy_log(self):
         """The attached engine's :class:`~repro.core.policy.PolicyLog`
         (``None`` without an engine).  The log is appended on the worker
-        thread — read it inside ``on_window`` or after ``drain``/``close``."""
+        threads — read it inside ``on_window`` or after ``drain``/``close``."""
         return self._engine.log if self._engine is not None else None
 
     # -- introspection -------------------------------------------------------
@@ -223,8 +377,13 @@ class AsyncAnalysisSession:
         return self._session
 
     @property
+    def workers(self) -> int:
+        """Size of the analysis worker pool."""
+        return self._workers_n
+
+    @property
     def pending(self) -> int:
-        """Windows queued but not yet analyzed (bounded by ``max_queue``)."""
+        """Windows queued but not yet claimed (bounded by ``max_queue``)."""
         with self._cv:
             return len(self._q)
 

@@ -38,7 +38,8 @@ import numpy as np
 from .analyzer import (AnalysisReport, Measurements, RootCauseReport,
                        external_root_causes, fingerprint_arrays,
                        internal_root_causes)
-from .external import analyze_external
+from .external import COLLAPSE_AUTO, COLLAPSE_EXACT, COLLAPSE_MODES, \
+    analyze_external
 from .internal import InternalReport, analyze_internal, crnm
 from .kmeans import KMeansResult
 from .regions import RegionTree
@@ -65,14 +66,17 @@ def _checked_attrs(measurements: Measurements,
 
 def analyze_window(tree: RegionTree, measurements: Measurements,
                    attributes: Mapping[str, np.ndarray],
-                   roles: Optional[Mapping[str, str]] = None
-                   ) -> AnalysisReport:
+                   roles: Optional[Mapping[str, str]] = None,
+                   collapse: str = COLLAPSE_AUTO,
+                   column_workers: int = 1) -> AnalysisReport:
     """The paper's full single-window pipeline (§4 driver).  ``roles`` is
     the collection schema's attribute-role declaration, recorded on the
     root-cause reports for name-free interpretation of cores."""
     report, _, _ = _analyze_window_cached(tree, measurements, attributes,
                                           memo=None, internal_gate_s=None,
-                                          keep_memo=False, roles=roles)
+                                          keep_memo=False, roles=roles,
+                                          collapse=collapse,
+                                          column_workers=column_workers)
     return report
 
 
@@ -104,12 +108,27 @@ def _gated_internal(tree: RegionTree) -> InternalReport:
                           ccrs=(), cccrs=(), region_ids=tree.ids())
 
 
+def _gate_needs_exact(ext, internal_gate_s: Optional[float]) -> bool:
+    """True when the collapsed severity's certified interval straddles the
+    internal gate: the reported S is a lower bound within
+    ``certificate.severity_bound`` of the exact value, so a gate inside
+    that interval could be decided differently by the exact path — re-run
+    exactly rather than let the approximation flip a gating decision."""
+    return (internal_gate_s is not None and not ext.exists
+            and ext.certificate is not None
+            and ext.certificate.severity_bound > 0.0
+            and ext.severity < internal_gate_s
+            <= ext.severity + ext.certificate.severity_bound)
+
+
 def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
                            attributes: Mapping[str, np.ndarray],
                            memo: Optional[_WindowMemo],
                            internal_gate_s: Optional[float],
                            keep_memo: bool = True,
-                           roles: Optional[Mapping[str, str]] = None
+                           roles: Optional[Mapping[str, str]] = None,
+                           collapse: str = COLLAPSE_AUTO,
+                           column_workers: int = 1
                            ) -> Tuple[AnalysisReport, Tuple[str, ...],
                                       Optional[_WindowMemo]]:
     """Single-window pipeline with stage-level reuse against ``memo``.
@@ -123,7 +142,11 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
     """
     attrs = _checked_attrs(measurements, attributes)
     if memo is not None or keep_memo:
-        fp_cpu = fingerprint_arrays(measurements.cpu_time)
+        # the collapse mode changes the external report (certified severity
+        # bound vs exact severity), so it salts the external fingerprint —
+        # a memo taken under one mode can never be replayed under another
+        fp_cpu = fingerprint_arrays(measurements.cpu_time,
+                                    salt=f"collapse={collapse}")
         fp_internal = fingerprint_arrays(
             measurements.wall_time, measurements.program_wall,
             measurements.cycles, measurements.instructions)
@@ -141,7 +164,13 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
         else:
             ext_rc = external_root_causes(tree, attrs, ext, roles=roles)
     else:
-        ext = analyze_external(tree, measurements.cpu_time)
+        ext = analyze_external(tree, measurements.cpu_time,
+                               collapse=collapse,
+                               column_workers=column_workers)
+        if _gate_needs_exact(ext, internal_gate_s):
+            ext = analyze_external(tree, measurements.cpu_time,
+                                   collapse=COLLAPSE_EXACT,
+                                   column_workers=column_workers)
         ext_rc = external_root_causes(tree, attrs, ext, roles=roles)
 
     gated = (internal_gate_s is not None and not ext.exists
@@ -355,6 +384,22 @@ class SessionReport:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass(frozen=True)
+class PreparedWindow:
+    """Output of :meth:`AnalysisSession.prepare` — one fully analyzed
+    window, not yet appended to any timeline.  Carries everything
+    :meth:`AnalysisSession.ingest_prepared` needs to assemble the entry
+    in submission order: the frozen report, the reuse bookkeeping, and the
+    snapshot-derived policy surface (``gap_ranks``/``rank_cpu``)."""
+
+    label: Optional[str]
+    report: AnalysisReport
+    cache_hits: Tuple[str, ...]
+    gap_ranks: Tuple[int, ...]
+    rank_cpu: Tuple[float, ...]
+    memo: Optional[_WindowMemo]
+
+
 class AnalysisSession:
     """Consumes successive window snapshots of a live run and maintains the
     per-window reports + cross-window diffs.  ``keep_windows`` bounds memory
@@ -378,11 +423,17 @@ class AnalysisSession:
 
     def __init__(self, tree: RegionTree, keep_windows: Optional[int] = None,
                  *, reuse: bool = True,
-                 internal_gate_s: Optional[float] = None):
+                 internal_gate_s: Optional[float] = None,
+                 collapse: str = COLLAPSE_AUTO, column_workers: int = 1):
+        if collapse not in COLLAPSE_MODES:
+            raise ValueError(f"collapse must be one of {COLLAPSE_MODES}, "
+                             f"got {collapse!r}")
         self.tree = tree
         self.keep_windows = keep_windows
         self.reuse = reuse
         self.internal_gate_s = internal_gate_s
+        self.collapse = collapse
+        self.column_workers = column_workers
         self._memo: Optional[_WindowMemo] = None
         self._entries: List[WindowEntry] = []
         self._next_index = 0
@@ -399,6 +450,72 @@ class AnalysisSession:
         return tuple(self._entries)
 
     # -- ingestion -----------------------------------------------------------
+    def prepare(self, measurements: Measurements,
+                attributes: Mapping[str, np.ndarray],
+                label: Optional[str] = None,
+                gap_ranks: Tuple[int, ...] = (),
+                attr_roles: Optional[Mapping[str, str]] = None,
+                memo: Optional[_WindowMemo] = None) -> "PreparedWindow":
+        """Stage 1 of ``ingest``: the full single-window analysis, touching
+        no mutable session state — safe to run from several threads at once
+        (the async pool's sharding unit).  ``memo`` is the predecessor memo
+        to attempt stage reuse against; pool workers pass the latest
+        *assembled* memo, which may lag the true predecessor — any memo is
+        correct (reuse only ever substitutes results for fingerprint-equal
+        inputs), a stale one just scores fewer hits.  Ignored when the
+        session was built with ``reuse=False``."""
+        report, hits, new_memo = _analyze_window_cached(
+            self.tree, measurements, attributes,
+            memo=memo if self.reuse else None,
+            internal_gate_s=self.internal_gate_s, keep_memo=self.reuse,
+            roles=attr_roles, collapse=self.collapse,
+            column_workers=self.column_workers)
+        rank_cpu = tuple(float(x) for x in
+                         as_matrix(measurements.cpu_time).sum(axis=1))
+        return PreparedWindow(label=label, report=report, cache_hits=hits,
+                              gap_ranks=tuple(int(r) for r in gap_ranks),
+                              rank_cpu=rank_cpu, memo=new_memo)
+
+    def prepare_snapshot(self, snap, label: Optional[str] = None,
+                         memo: Optional[_WindowMemo] = None
+                         ) -> "PreparedWindow":
+        """:meth:`prepare` for a ``perfdbg.recorder.WindowSnapshot`` (the
+        thread-safe half of :meth:`ingest_snapshot`)."""
+        mask = getattr(snap, "gap_mask", None)
+        gaps = tuple(int(r) for r in np.flatnonzero(mask)) \
+            if mask is not None else ()
+        roles_fn = getattr(snap, "attribute_roles", None)
+        return self.prepare(snap.measurements(), snap.attributes(),
+                            label=label or snap.label, gap_ranks=gaps,
+                            attr_roles=roles_fn() if roles_fn else None,
+                            memo=memo)
+
+    def ingest_prepared(self, prepared: "PreparedWindow") -> WindowEntry:
+        """Stage 2 of ``ingest``: append a prepared window to the timeline
+        (diff vs the previous entry, index assignment, memo update).  Must
+        be called from one thread at a time, in submission order — this is
+        the in-order assembly step the async pool serializes."""
+        if self.reuse:
+            self._memo = prepared.memo
+        prev = self._entries[-1].report if self._entries else None
+        entry = WindowEntry(self._next_index, prepared.label, prepared.report,
+                            diff_reports(prev, prepared.report),
+                            gap_ranks=prepared.gap_ranks,
+                            rank_cpu=prepared.rank_cpu,
+                            cache_hits=prepared.cache_hits)
+        self._next_index += 1
+        self._entries.append(entry)
+        if self.keep_windows is not None and len(self._entries) > self.keep_windows:
+            del self._entries[:len(self._entries) - self.keep_windows]
+        return entry
+
+    @property
+    def latest_memo(self) -> Optional[_WindowMemo]:
+        """The memo of the most recently assembled window (``None`` before
+        the first window or with ``reuse=False``) — what concurrent
+        preparers should pass to :meth:`prepare`."""
+        return self._memo
+
     def ingest(self, measurements: Measurements,
                attributes: Mapping[str, np.ndarray],
                label: Optional[str] = None,
@@ -409,26 +526,9 @@ class AnalysisSession:
         (missing hosts in a merged pod view).  ``attr_roles`` is the
         schema's attribute-name -> semantic-role declaration (snapshots
         supply it automatically via ``ingest_snapshot``)."""
-        report, hits, memo = _analyze_window_cached(
-            self.tree, measurements, attributes,
-            memo=self._memo if self.reuse else None,
-            internal_gate_s=self.internal_gate_s, keep_memo=self.reuse,
-            roles=attr_roles)
-        if self.reuse:
-            self._memo = memo
-        prev = self._entries[-1].report if self._entries else None
-        rank_cpu = tuple(float(x) for x in
-                         as_matrix(measurements.cpu_time).sum(axis=1))
-        entry = WindowEntry(self._next_index, label, report,
-                            diff_reports(prev, report),
-                            gap_ranks=tuple(int(r) for r in gap_ranks),
-                            rank_cpu=rank_cpu,
-                            cache_hits=hits)
-        self._next_index += 1
-        self._entries.append(entry)
-        if self.keep_windows is not None and len(self._entries) > self.keep_windows:
-            del self._entries[:len(self._entries) - self.keep_windows]
-        return entry
+        return self.ingest_prepared(self.prepare(
+            measurements, attributes, label=label, gap_ranks=gap_ranks,
+            attr_roles=attr_roles, memo=self._memo))
 
     def ingest_snapshot(self, snap, label: Optional[str] = None) -> WindowEntry:
         """Analyze a ``perfdbg.recorder.WindowSnapshot``; the snapshot's

@@ -129,6 +129,47 @@ def keep_columns(perf: np.ndarray, cols: Sequence[int]) -> np.ndarray:
     return out
 
 
+def ball_group_rows(X: np.ndarray, radius: float,
+                    max_groups: Optional[int] = None
+                    ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Greedy leader grouping of rows into Euclidean balls of ``radius``.
+
+    Deterministic: the first (lowest-index) ungrouped row becomes the next
+    leader, and every later row within ``radius`` of it joins that group —
+    one vectorized distance pass over the remaining rows per leader, so
+    the cost is O(groups * m * n) worst case and O(m * n) per *effective*
+    group when the data really is a few jittered clouds.  Group ids are
+    dense and ordered by leader index (ascending row order).
+
+    Returns ``(gid, leaders, delta)`` where ``gid[i]`` is row i's group,
+    ``leaders[g]`` the representative row index, and ``delta[g]`` the
+    *measured* max distance from any member to its leader (the collapse
+    radius certificates are built from — the greedy assignment is only a
+    heuristic, ``delta`` is what makes it sound).  Returns ``None`` when
+    more than ``max_groups`` leaders emerge: the grouping would not pay
+    for itself and the caller should keep the exact representation.
+    """
+    X = as_matrix(X)
+    m = X.shape[0]
+    gid = np.full(m, -1, dtype=np.int64)
+    leaders: list = []
+    deltas: list = []
+    remaining = np.arange(m)
+    while remaining.size:
+        lead = int(remaining[0])
+        diff = X[remaining] - X[lead]
+        d = np.sqrt(np.einsum("ij,ij->i", diff, diff))
+        mask = d <= radius
+        gid[remaining[mask]] = len(leaders)
+        leaders.append(lead)
+        deltas.append(float(np.max(d[mask])))
+        remaining = remaining[~mask]
+        if max_groups is not None and len(leaders) > max_groups:
+            return None
+    return (gid, np.asarray(leaders, dtype=np.int64),
+            np.asarray(deltas, dtype=np.float64))
+
+
 def canonical_partition(labels: Sequence[int]) -> Tuple[Tuple[int, ...], ...]:
     """Canonical form of a clustering result: clusters as sorted tuples of
     member indices, ordered by smallest member.  Two clusterings are 'the

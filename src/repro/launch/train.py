@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import os
 import sys
 import time
 
@@ -71,6 +72,13 @@ def main(argv=None) -> int:
                          "on the async worker thread")
     ap.add_argument("--analysis-queue", type=int, default=4,
                     help="max windows pending in the async analysis queue")
+    ap.add_argument("--analysis-workers", type=int,
+                    default=int(os.environ.get("PERFDBG_ANALYSIS_WORKERS",
+                                               "1")),
+                    help="analysis worker pool size (windows are assembled "
+                         "in submission order, so reports and policy "
+                         "decisions are identical for any value; env "
+                         "default PERFDBG_ANALYSIS_WORKERS)")
     ap.add_argument("--analysis-backpressure", default="block",
                     choices=("block", "drop-oldest"),
                     help="queue-full policy: stall the step loop vs evict "
@@ -328,6 +336,7 @@ def main(argv=None) -> int:
         pipeline = AsyncAnalysisSession(
             tree, max_queue=args.analysis_queue,
             backpressure=args.analysis_backpressure.replace("-", "_"),
+            workers=args.analysis_workers,
             on_window=on_window, policy_engine=engine)
 
     def burn(ms: float) -> None:

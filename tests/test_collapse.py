@@ -1,0 +1,303 @@
+"""Certified approximate rank collapse: the quantized search must report
+the exact search's labels/CCRs/CCCRs whenever its certificate accepts, fall
+back to the exact path when it cannot prove identity (adversarial near-eps
+inputs), and bound the reported severity's distance from the exact value.
+Also covers the ball grouping primitive, the weighted 1-D k-means used by
+the representative handoff, and column-parallel search determinism."""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade property tests to fixed-seed example sweeps
+    from _hypo import given, settings, st
+
+from repro.core import (AnalysisSession, COLLAPSE_EXACT, COLLAPSE_QUANTIZED,
+                        Measurements, RegionTree, analyze_external, cluster,
+                        kmeans_1d)
+from repro.core._reference import analyze_external_reference
+from repro.core.external import (AUTO_COLLAPSE_MIN_RANKS, ExternalAnalyzer)
+from repro.core.vectors import ball_group_rows
+
+
+def chain_tree(n):
+    tree = RegionTree()
+    for i in range(1, n + 1):
+        tree.add(f"r{i}", rid=i)
+    return tree
+
+
+def jittered_pod(rng, m, n, groups, jitter, hot=None):
+    """``m`` ranks drawn from ``groups`` base rows + per-rank jitter —
+    the pod shape the collapse targets (near-duplicate shards)."""
+    base = rng.uniform(5.0, 50.0, (groups, n))
+    perf = base[rng.integers(0, groups, m)] + jitter * rng.standard_normal((m, n))
+    perf = np.abs(perf)
+    if hot is not None:
+        col, factor = hot
+        perf[: max(2, m // 8), col] *= factor
+    return perf
+
+
+# ---------------------------------------------------------------------------
+# ball grouping primitive
+# ---------------------------------------------------------------------------
+
+class TestBallGroupRows:
+    def test_groups_and_deltas(self):
+        X = np.array([[0.0, 0.0], [0.1, 0.0], [5.0, 0.0], [5.0, 0.05],
+                      [0.0, 0.05]])
+        gid, leaders, delta = ball_group_rows(X, radius=0.5)
+        assert gid.tolist() == [0, 0, 1, 1, 0]
+        assert leaders.tolist() == [0, 2]
+        # delta is the measured max member->leader distance, not the radius
+        assert delta[0] == pytest.approx(0.1)
+        assert delta[1] == pytest.approx(0.05)
+
+    def test_deltas_bound_every_member(self):
+        rng = np.random.default_rng(7)
+        X = jittered_pod(rng, 64, 5, groups=3, jitter=1e-3)
+        gid, leaders, delta = ball_group_rows(X, radius=0.1)
+        for g, lead in enumerate(leaders):
+            d = np.linalg.norm(X[gid == g] - X[lead], axis=1)
+            assert np.all(d <= delta[g] + 1e-15)
+            assert np.max(d) == pytest.approx(delta[g])
+
+    def test_max_groups_bail(self):
+        X = np.diag(np.arange(1.0, 9.0))      # 8 mutually distant rows
+        assert ball_group_rows(X, radius=0.1, max_groups=4) is None
+        gid, leaders, _ = ball_group_rows(X, radius=0.1, max_groups=8)
+        assert len(leaders) == 8 and gid.tolist() == list(range(8))
+
+    def test_exact_duplicates_zero_delta(self):
+        X = np.tile([3.0, 4.0], (10, 1))
+        gid, leaders, delta = ball_group_rows(X, radius=1e-6)
+        assert len(leaders) == 1 and delta[0] == 0.0
+        assert np.all(gid == 0)
+
+
+# ---------------------------------------------------------------------------
+# quantized vs exact: labels identical, severity certified
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(8, 48), st.integers(2, 6), st.integers(1, 4),
+       st.sampled_from([0.0, 1e-8, 1e-5, 1e-3]), st.integers(0, 99999))
+def test_quantized_matches_exact(m, n, groups, jitter, seed):
+    """Certificate acceptance proves label identity; fallback guarantees
+    it.  Either way the quantized report's clustering/CCRs/CCCRs must equal
+    the exact search's, and the severity must sit within the certified
+    bound below the exact value."""
+    rng = np.random.default_rng(seed)
+    perf = jittered_pod(rng, m, n, groups, jitter,
+                        hot=(int(rng.integers(0, n)), 3.0)
+                        if rng.random() < 0.5 else None)
+    tree = chain_tree(n)
+    q = analyze_external(tree, perf, collapse=COLLAPSE_QUANTIZED)
+    e = analyze_external(tree, perf, collapse=COLLAPSE_EXACT)
+    assert q.clustering == e.clustering
+    assert q.ccrs == e.ccrs
+    assert q.cccrs == e.cccrs
+    assert q.exists == e.exists
+    cert = q.certificate
+    assert cert is not None and cert.ranks == m
+    assert cert.groups <= cert.distinct_rows <= m
+    # reported severity is a lower bound within severity_bound of exact
+    assert q.severity <= e.severity + 1e-12
+    assert e.severity <= q.severity + cert.severity_bound + 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(6, 20), st.integers(2, 5), st.integers(0, 9999))
+def test_quantized_matches_reference_oracle(m, n, seed):
+    """End-to-end against the retained reference search (reference
+    clustering, no fast path, no collapse)."""
+    rng = np.random.default_rng(seed)
+    perf = jittered_pod(rng, m, n, groups=2, jitter=1e-6, hot=(0, 4.0))
+    tree = chain_tree(n)
+    q = analyze_external(tree, perf, collapse=COLLAPSE_QUANTIZED)
+    ref = analyze_external_reference(tree, perf)
+    assert q.clustering == ref.clustering
+    assert q.cccrs == ref.cccrs
+    assert q.ccrs == ref.ccrs
+    assert ref.severity <= q.severity + q.certificate.severity_bound + 1e-12
+
+
+def test_adversarial_near_eps_forces_exact_fallback():
+    """Rows placed so a representative-level edge decision would differ
+    from a member-level one: 10 vs {10.95, 11.05} with eps(10) = 1.0 —
+    the leader sits inside eps but one member outside.  The certificate
+    must refuse and the analyzer must fall back to an exact path, still
+    matching the reference output."""
+    tree = chain_tree(1)
+    perf = np.array([[10.0], [10.95], [11.05]])
+    an = ExternalAnalyzer(tree, perf, collapse=COLLAPSE_QUANTIZED)
+    rep = an.analyze()
+    ref = analyze_external_reference(tree, perf)
+    assert rep.clustering == ref.clustering
+    assert rep.cccrs == ref.cccrs
+    cert = rep.certificate
+    assert rep.severity <= ref.severity \
+        <= rep.severity + cert.severity_bound + 1e-12
+    if cert.groups < cert.distinct_rows:     # the collapse actually merged
+        assert cert.exact_calls > 0          # ... so the cert had to reject
+
+
+def test_certificate_severity_bound_is_sound_under_merging():
+    """A pod whose jitter is large enough to matter for S but small enough
+    to collapse: the certified interval must contain the exact S."""
+    rng = np.random.default_rng(3)
+    perf = jittered_pod(rng, 96, 4, groups=2, jitter=5e-4, hot=(1, 3.0))
+    tree = chain_tree(4)
+    q = analyze_external(tree, perf, collapse=COLLAPSE_QUANTIZED)
+    e = analyze_external(tree, perf, collapse=COLLAPSE_EXACT)
+    cert = q.certificate
+    assert cert.mode == "quantized" and cert.delta_max > 0.0
+    assert cert.groups < cert.distinct_rows
+    assert q.severity <= e.severity <= q.severity + cert.severity_bound
+
+
+def test_auto_mode_thresholds():
+    """``auto`` keeps small windows bit-identical (exact mode) and engages
+    the quantized collapse at pod scale."""
+    tree = chain_tree(3)
+    rng = np.random.default_rng(0)
+    small = jittered_pod(rng, 32, 3, groups=2, jitter=1e-6)
+    rep = analyze_external(tree, small)          # collapse="auto"
+    assert rep.certificate is None or rep.certificate.mode == "exact"
+    assert rep.render() == analyze_external(
+        tree, small, collapse=COLLAPSE_EXACT).render()
+
+    big = jittered_pod(rng, AUTO_COLLAPSE_MIN_RANKS, 3, groups=2,
+                       jitter=1e-6, hot=(0, 3.0))
+    repb = analyze_external(tree, big)
+    assert repb.certificate is not None
+    assert repb.certificate.mode == "quantized"
+    assert repb.certificate.ranks == AUTO_COLLAPSE_MIN_RANKS
+    exact = analyze_external(tree, big, collapse=COLLAPSE_EXACT)
+    assert repb.clustering == exact.clustering
+    assert repb.cccrs == exact.cccrs
+
+
+def test_collapse_mode_validation():
+    tree = chain_tree(2)
+    with pytest.raises(ValueError):
+        analyze_external(tree, np.ones((3, 2)), collapse="approximate")
+    with pytest.raises(ValueError):
+        ExternalAnalyzer(tree, np.ones((3, 2)), column_workers=0)
+
+
+# ---------------------------------------------------------------------------
+# column-parallel search determinism
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(6, 24), st.integers(3, 7), st.integers(0, 9999))
+def test_column_workers_render_identical(m, n, seed):
+    rng = np.random.default_rng(seed)
+    perf = jittered_pod(rng, m, n, groups=3, jitter=1e-4, hot=(1, 4.0))
+    tree = chain_tree(n)
+    solo = analyze_external(tree, perf, column_workers=1)
+    par = analyze_external(tree, perf, column_workers=3)
+    assert par.render(tree) == solo.render(tree)
+    assert par.ccrs == solo.ccrs and par.cccrs == solo.cccrs
+
+
+# ---------------------------------------------------------------------------
+# weighted 1-D k-means (representative handoff)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 24), st.integers(0, 99999))
+def test_weighted_kmeans_matches_repeat_expansion(u, seed):
+    """k-means over (value, weight) pairs must label exactly like k-means
+    over the weight-expanded array; centroids agree up to float
+    accumulation order."""
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.uniform(0.0, 100.0, u))
+    w = rng.integers(1, 6, u)
+    expanded = np.repeat(vals, w)
+    a = kmeans_1d(vals, weights=w.astype(float))
+    b = kmeans_1d(expanded)
+    # group labels must match the expansion's labels position-for-position
+    assert tuple(np.repeat(a.labels, w)) == b.labels
+    assert a.centroids == pytest.approx(b.centroids, rel=1e-9, abs=1e-12)
+
+
+def test_weighted_kmeans_validation_and_degenerate():
+    with pytest.raises(ValueError):
+        kmeans_1d([1.0, 2.0], weights=[1.0])
+    with pytest.raises(ValueError):
+        kmeans_1d([1.0, 2.0], weights=[1.0, 0.0])
+    one = kmeans_1d([5.0, 5.0, 5.0], weights=[2.0, 1.0, 4.0])
+    assert set(one.labels) <= {0, int(max(one.labels))}
+    assert len(set(one.centroids)) >= 1
+
+
+# ---------------------------------------------------------------------------
+# session gate proximity: approximation must not flip gating decisions
+# ---------------------------------------------------------------------------
+
+def gate_window(tree, seed, jitter=2e-3):
+    rng = np.random.default_rng(seed)
+    m, n = 64, len(tree)
+    cpu = np.abs(np.tile(rng.uniform(5.0, 9.0, n), (m, 1))
+                 + jitter * rng.standard_normal((m, n)))
+    wall = cpu * 1.1
+    meas = Measurements(cpu, wall, wall.sum(axis=1),
+                        rng.uniform(1e6, 5e6, (m, n)),
+                        rng.uniform(1e6, 2e6, (m, n)))
+    attrs = {"l1_miss_rate": rng.uniform(0, 1, (m, n)),
+             "network_io": rng.uniform(0, 1, (m, n))}
+    return meas, attrs
+
+
+def test_session_gate_straddle_falls_back_to_exact():
+    """When the certified severity interval straddles ``internal_gate_s``,
+    the session must re-run exactly — its report has to match the
+    exact-collapse session's byte for byte for any gate placement."""
+    tree = chain_tree(4)
+    meas, attrs = gate_window(tree, seed=11)
+    probe = analyze_external(tree, meas.cpu_time, collapse=COLLAPSE_QUANTIZED)
+    cert = probe.certificate
+    assert not probe.exists and cert.severity_bound > 0.0
+    exact_probe = analyze_external(tree, meas.cpu_time,
+                                   collapse=COLLAPSE_EXACT)
+    gates = [probe.severity + 0.5 * cert.severity_bound,   # inside interval
+             probe.severity + 2.0 * cert.severity_bound
+             + exact_probe.severity,                        # safely above
+             probe.severity * 0.5]                          # safely below
+    for i, gate in enumerate(gates):
+        sq = AnalysisSession(tree, internal_gate_s=gate,
+                             collapse=COLLAPSE_QUANTIZED)
+        se = AnalysisSession(tree, internal_gate_s=gate,
+                             collapse=COLLAPSE_EXACT)
+        eq = sq.ingest(meas, attrs, label="w0")
+        ee = se.ingest(meas, attrs, label="w0")
+        # the gating *decision* may never differ between the two modes
+        assert eq.report.external.exists == ee.report.external.exists
+        assert ("internal_gated" in eq.cache_hits) == \
+               ("internal_gated" in ee.cache_hits)
+        ext = eq.report.external
+        assert ext.clustering == ee.report.external.clustering
+        if i == 0:
+            # straddle: the session re-ran exactly, so the whole report
+            # (severity included) is the exact one, byte for byte
+            assert sq.report().render() == se.report().render()
+        else:
+            # away from the gate the quantized severity stays a certified
+            # lower bound of the exact value
+            bound = ext.certificate.severity_bound if ext.certificate else 0.0
+            assert ext.severity <= ee.report.external.severity \
+                <= ext.severity + bound + 1e-12
+
+
+def test_session_collapse_fingerprints_do_not_cross_modes():
+    """Reuse memos are salted with the collapse mode, so a quantized
+    session never replays an exact session's cached stage (and vice
+    versa); within one session repeats still hit."""
+    tree = chain_tree(3)
+    meas, attrs = gate_window(tree, seed=5)
+    s = AnalysisSession(tree, collapse=COLLAPSE_QUANTIZED)
+    s.ingest(meas, attrs, label="a")
+    e2 = s.ingest(meas, attrs, label="b")
+    assert "external" in e2.cache_hits

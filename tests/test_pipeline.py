@@ -48,6 +48,11 @@ class SlowSession(AnalysisSession):
         time.sleep(self.delay)
         return super().ingest_snapshot(snap, label=label)
 
+    def prepare_snapshot(self, snap, label=None, memo=None):
+        # the pooled path (workers > 1) runs this stage instead
+        time.sleep(self.delay)
+        return super().prepare_snapshot(snap, label=label, memo=memo)
+
 
 class TestEquivalence:
     def test_async_report_byte_identical_to_sync(self):
@@ -221,3 +226,145 @@ class TestContract:
         assert report.render(tree) == sync.report().render(tree)
         # both recorders were reset by the freeze
         assert rec_a.window_index == rec_b.window_index == 1
+
+
+class TestPool:
+    """workers > 1: windows are analyzed concurrently but assembled in
+    strict submission order — reports, callbacks, and policy decisions
+    must be indistinguishable from the single-worker pipeline."""
+
+    def stream(self, tree, n=10):
+        return window_stream(tree, n, hot_at={2: {2: 8.0}, 3: {2: 8.0},
+                                              4: {1: 8.0}, 7: {3: 8.0}})
+
+    def test_pooled_report_byte_identical_to_sync(self):
+        tree = small_tree()
+        snaps = self.stream(tree)
+        sync = AnalysisSession(tree)
+        for s in snaps:
+            sync.ingest_snapshot(s)
+        for workers in (2, 4):
+            with AsyncAnalysisSession(tree, workers=workers) as pipe:
+                for s in snaps:
+                    pipe.submit(s)
+                report = pipe.drain()
+            assert report.render(tree) == sync.report().render(tree)
+
+    def test_pooled_on_window_in_submission_order(self):
+        tree = small_tree()
+        seen = []
+        with AsyncAnalysisSession(
+                tree, workers=4, session=SlowSession(tree, delay=0.003),
+                on_window=lambda e: seen.append(e.index)) as pipe:
+            for s in self.stream(tree, 12):
+                pipe.submit(s)
+        assert seen == list(range(12))
+
+    def test_pooled_policy_log_identical_to_single_worker(self):
+        """The policy engine sees the identical entry stream regardless of
+        worker count: decision logs render identically."""
+        from repro.core.policy import PolicyEngine, RebalancePolicy
+
+        tree = small_tree()
+        rec = RegionRecorder(tree, 6, max_windows=8)
+        for w in range(8):
+            for r in range(6):
+                f = 4.0 if (r == 5 and w >= 2) else 1.0   # rank 5 straggles
+                for rid in tree.ids():
+                    rec.add(r, rid, cpu_time=f, wall_time=f, cycles=f * 2e9,
+                            instructions=1e9)
+                rec.add_program_wall(r, float(len(tree.ids())) * f)
+            rec.reset_window(f"w{w}")
+        snaps = rec.windows()
+        logs = []
+        for workers in (1, 3):
+            engine = PolicyEngine([RebalancePolicy()], k=2, cooldown=0)
+            with AsyncAnalysisSession(tree, workers=workers,
+                                      policy_engine=engine) as pipe:
+                for s in snaps:
+                    pipe.submit(s)
+                pipe.drain()
+                pipe.take_actions()
+            logs.append([d.render() for d in engine.log.decisions])
+        assert logs[0] == logs[1]
+        assert logs[0]  # the hot stream must actually fire decisions
+
+    def test_pooled_flood_block_policy(self):
+        tree = small_tree()
+        snaps = window_stream(tree, 1) * 40
+        pipe = AsyncAnalysisSession(
+            tree, max_queue=3, backpressure=BLOCK, workers=3,
+            session=SlowSession(tree, delay=0.004))
+        max_pending = 0
+        for s in snaps:
+            pipe.submit(s)
+            max_pending = max(max_pending, pipe.pending)
+        report = pipe.close(timeout=30.0)
+        assert max_pending <= 3
+        assert pipe.dropped == 0 and pipe.analyzed == 40
+        assert [w.index for w in report.windows] == list(range(40))
+
+    def test_pooled_flood_drop_oldest_accounting(self):
+        tree = small_tree()
+        pipe = AsyncAnalysisSession(
+            tree, max_queue=2, backpressure=DROP_OLDEST, workers=2,
+            session=SlowSession(tree, delay=0.01))
+        for s in window_stream(tree, 1) * 60:
+            pipe.submit(s)
+            assert pipe.pending <= 2
+        report = pipe.close(timeout=30.0)
+        assert pipe.dropped > 0
+        assert pipe.analyzed + pipe.dropped == pipe.submitted == 60
+        assert len(report.windows) == pipe.analyzed
+
+    def test_pooled_worker_error_with_original_cause(self):
+        tree = small_tree()
+
+        class Boom(AnalysisSession):
+            def prepare_snapshot(self, snap, label=None, memo=None):
+                raise ValueError("pooled kaboom")
+
+        pipe = AsyncAnalysisSession(tree, session=Boom(tree), workers=2)
+        pipe.submit(window_stream(tree, 1)[0])
+        with pytest.raises(RuntimeError, match="analysis worker failed") as ei:
+            pipe.drain(timeout=10.0)
+        assert isinstance(ei.value.__cause__, ValueError)
+        assert "pooled kaboom" in str(ei.value.__cause__)
+        assert pipe.analyzed == 0 and pipe.submitted == 1
+
+    def test_pooled_close_flushes_backlog_and_drain_timeout(self):
+        tree = small_tree()
+        pipe = AsyncAnalysisSession(tree, max_queue=8, workers=2,
+                                    session=SlowSession(tree, delay=0.05))
+        for s in window_stream(tree, 6):
+            pipe.submit(s)
+        with pytest.raises(TimeoutError):
+            pipe.drain(timeout=0.01)
+        assert len(pipe.close(timeout=30.0).windows) == 6
+
+    def test_pooled_reuse_hits_when_serialized(self):
+        """Draining between submits keeps the memo fresh, so the pooled
+        path reuses stages exactly like the synchronous session."""
+        tree = small_tree()
+        snaps = window_stream(tree, 6)
+        pipe = AsyncAnalysisSession(tree, workers=2)
+        for s in snaps:
+            pipe.submit(s)
+            pipe.drain()
+        report = pipe.close()
+        assert report.cache_hit_counts().get("external", 0) >= 2
+
+    def test_workers_validation_and_property(self):
+        with pytest.raises(ValueError, match="workers"):
+            AsyncAnalysisSession(small_tree(), workers=0)
+        with AsyncAnalysisSession(small_tree(), workers=2) as pipe:
+            assert pipe.workers == 2
+
+    def test_collapse_kwargs_conflict_with_session(self):
+        tree = small_tree()
+        with pytest.raises(ValueError, match="session="):
+            AsyncAnalysisSession(tree, session=AnalysisSession(tree),
+                                 collapse="exact")
+        with pytest.raises(ValueError, match="session="):
+            AsyncAnalysisSession(tree, session=AnalysisSession(tree),
+                                 column_workers=2)
