@@ -26,6 +26,12 @@ import numpy as np
 
 MANIFEST = "manifest.json"
 
+#: Manifest keys ``save`` writes itself.  ``extra`` keys must not collide —
+#: a driver stashing e.g. pipeline state under ``"step"`` would silently
+#: clobber the restore step.
+RESERVED_MANIFEST_KEYS = frozenset({"step", "n_arrays", "total_bytes",
+                                    "time"})
+
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
@@ -57,6 +63,12 @@ def _unflatten(template, flat: Dict[str, np.ndarray]):
 
 def save(ckpt_dir, step: int, state, extra: Optional[Dict[str, Any]] = None,
          keep: int = 3) -> pathlib.Path:
+    if extra:
+        clash = RESERVED_MANIFEST_KEYS & set(extra)
+        if clash:
+            raise ValueError(f"extra manifest keys {sorted(clash)} collide "
+                             f"with reserved keys "
+                             f"{sorted(RESERVED_MANIFEST_KEYS)}")
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     tmp = ckpt_dir / f".tmp_step_{step}_{int(time.time()*1e6)}"
@@ -68,9 +80,22 @@ def save(ckpt_dir, step: int, state, extra: Optional[Dict[str, Any]] = None,
                 "time": time.time(), **(extra or {})}
     (tmp / MANIFEST).write_text(json.dumps(manifest, indent=2))
     final = ckpt_dir / f"step_{step}"
+    # re-saving an existing step: set the old dir aside (rename, cheap) so a
+    # valid step_<N> exists at every instant; roll it back if the commit
+    # rename fails.  The old rmtree-then-rename left a window with *no*
+    # checkpoint at this step.
+    old = None
     if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)                      # atomic commit
+        old = ckpt_dir / f".old_step_{step}_{int(time.time()*1e6)}"
+        final.rename(old)
+    try:
+        tmp.rename(final)                  # atomic commit
+    except BaseException:
+        if old is not None:
+            old.rename(final)
+        raise
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
     _gc(ckpt_dir, keep)
     return final
 
@@ -80,6 +105,13 @@ def _gc(ckpt_dir: pathlib.Path, keep: int) -> None:
                    for p in ckpt_dir.glob("step_*") if p.is_dir())
     for _, p in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(p, ignore_errors=True)
+    # leftovers of crashed saves (uncommitted tmps, unswept set-asides).
+    # Saves to one dir are serialized (AsyncCheckpointer joins before each),
+    # and the current save's tmp was renamed away before _gc runs, so
+    # everything still matching these patterns is stale.
+    for pat in (".tmp_step_*", ".old_step_*"):
+        for p in ckpt_dir.glob(pat):
+            shutil.rmtree(p, ignore_errors=True)
 
 
 def latest_step(ckpt_dir) -> Optional[int]:
@@ -119,21 +151,30 @@ def restore(ckpt_dir, template, step: Optional[int] = None,
 
 class AsyncCheckpointer:
     """Threaded save: snapshot to host memory synchronously (cheap), write in
-    the background; ``wait()`` joins before the next save or at shutdown."""
+    the background; ``wait()`` joins before the next save or at shutdown.
+
+    A background save that fails is never silent: the worker's exception is
+    recorded and re-raised from ``wait()`` (and thus from the next
+    ``save()``, which joins first) — ``last_path`` keeps pointing at the
+    last checkpoint that actually committed."""
 
     def __init__(self, ckpt_dir, keep: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
         self.last_path: Optional[pathlib.Path] = None
 
     def save(self, step: int, state, extra=None) -> None:
-        self.wait()
+        self.wait()                  # re-raises a failed in-flight save
         host_state = jax.tree_util.tree_map(np.asarray, state)
 
         def work():
-            self.last_path = save(self.ckpt_dir, step, host_state, extra,
-                                  self.keep)
+            try:
+                self.last_path = save(self.ckpt_dir, step, host_state, extra,
+                                      self.keep)
+            except BaseException as e:
+                self._exc = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -142,3 +183,6 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc

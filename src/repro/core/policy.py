@@ -31,7 +31,10 @@ Invariants:
 * The engine must see every window exactly once, in order (both drivers
   guarantee this); a key not re-proposed in a window loses its streak.
 * Policies never mutate the session; actuation is the caller's job (e.g.
-  ``launch/train.py`` feeds rebalance weights back into its work shares).
+  ``launch/train.py`` repartitions the live input pipeline — a fired
+  action's ``rebalance_weights`` become the ``data.pipeline.Partition``
+  slicing the next global batch, and the new partition rides the
+  checkpoint manifest across restarts).
 """
 from __future__ import annotations
 
@@ -69,6 +72,18 @@ class Action:
 
     def key(self) -> Tuple[str, str, Hashable]:
         return (self.policy, self.kind, self.target)
+
+    @property
+    def rebalance_weights(self) -> Optional[Tuple[float, ...]]:
+        """The full new per-rank work-weight vector a fired ``rebalance``
+        action carries (``params["weights"]``), or ``None`` when the action
+        has none.  This is the vector a driver feeds straight into its
+        actuation surface — e.g. ``launch/train.py`` repartitions the live
+        ``data.pipeline`` with it (``SyntheticTokens.set_partition``)."""
+        w = self.params.get("weights")
+        if w is None:
+            return None
+        return tuple(float(x) for x in w)
 
     def render(self) -> str:
         tgt = "" if self.target is None else f" target={self.target}"

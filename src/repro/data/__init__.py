@@ -1,1 +1,1 @@
-from .pipeline import PipelineState, SyntheticTokens
+from .pipeline import Partition, PipelineState, SyntheticTokens

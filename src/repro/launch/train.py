@@ -32,8 +32,18 @@ Features exercised end-to-end (CPU-sized here, mesh-parametric for pods):
     (a sick host) instead of burning CPU; when RebalancePolicy fires, its
     weights feed back into the work shares, the straggler's share shrinks,
     it leaves the verdict, and the per-window pod rate recovers
+  * --data-hosts H partitions the REAL input pipeline across H hosts via
+    data.pipeline.Partition: every global batch is sliced per host by the
+    live weights, each host's recorded io attribute is its slice's actual
+    bytes, and times are attributed by real byte shares (concurrent-host
+    model).  --data-skew injects a skewed initial partition (the reshard
+    demo's fault); a fired rebalance/reshard action repartitions the live
+    pipeline (``[actuate]`` log line tied to the PolicyLog entry), and the
+    partition rides the checkpoint manifest so a restore resumes with the
+    actuated weights, not the flag default
   * periodic + final checkpoints (atomic, async), auto-restart from latest
-  * deterministic data pipeline whose state lives in the checkpoint
+  * deterministic data pipeline whose state (step, bytes, partition) lives
+    in the checkpoint manifest
 """
 from __future__ import annotations
 
@@ -109,16 +119,35 @@ def main(argv=None) -> int:
                          "fired ReshardPolicy repartitions back to uniform)")
     ap.add_argument("--inject-factor", type=float, default=4.0,
                     help="slowdown of the last simulated rank under "
-                         "--sim-ranks + --inject-bottleneck-at")
+                         "--sim-ranks + --inject-bottleneck-at (or of the "
+                         "last data host under --data-hosts)")
+    ap.add_argument("--data-hosts", type=int, default=1,
+                    help="partition the real input pipeline across this "
+                         "many hosts (per-host batch slices from the live "
+                         "Partition; fired rebalance/reshard actions "
+                         "repartition it)")
+    ap.add_argument("--data-skew", type=float, default=1.0,
+                    help="with --data-hosts > 1: host 0's initial partition "
+                         "weight is this factor of uniform (the injected "
+                         "fault the reshard demo repairs); ignored on "
+                         "--resume when a checkpointed partition exists")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args(argv)
+    if args.data_hosts > 1 and args.sim_ranks > 1:
+        ap.error("--data-hosts and --sim-ranks are mutually exclusive: the "
+                 "real partitioned pipeline and the simulated pod disagree "
+                 "about what a rank is")
+    if args.data_hosts > 1 and args.batch < args.data_hosts:
+        ap.error(f"--data-hosts {args.data_hosts} needs --batch >= "
+                 f"{args.data_hosts} (every host gets at least one row)")
 
     import jax
     import jax.numpy as jnp
     from repro.configs import reduced_config, get_config
     from repro.core import (AnalysisSession, AsyncAnalysisSession,
                             PolicyEngine, RegionTree, make_policies)
-    from repro.data.pipeline import SyntheticTokens
+    from repro.core.roughset import ROLE_IO
+    from repro.data.pipeline import Partition, SyntheticTokens
     from repro.launch.collect import SnapshotCollector
     from repro.launch.mesh import make_host_mesh
     from repro.launch import steps as steps_lib
@@ -148,7 +177,12 @@ def main(argv=None) -> int:
         jitted, (st_shapes, st_sh, b_sh) = steps_lib.jit_train_step(
             cfg, opt_cfg, mesh, bshapes, microbatches=1)
 
+    H = max(args.data_hosts, 1)
     data = SyntheticTokens(cfg.vocab_size, args.batch, args.seq)
+    if H > 1:
+        w = np.ones(H)
+        w[0] = args.data_skew
+        data.set_partition(Partition(w))
     state = steps_lib.init_state(cfg, opt_cfg, seed=0)
     start_step = 0
 
@@ -157,13 +191,25 @@ def main(argv=None) -> int:
         saver = ckpt.AsyncCheckpointer(args.ckpt_dir)
         last = ckpt.latest_step(args.ckpt_dir)
         if args.resume and last is not None:
-            payload = {"state": state, "data": data.state_dict()}
-            restored, manifest = ckpt.restore(args.ckpt_dir, payload)
+            # model/opt state rides the array tree; the pipeline's state
+            # (step, bytes, partition weights) rides the manifest — an
+            # actuated partition therefore survives the restart and
+            # overrides the flag-built one above
+            restored, manifest = ckpt.restore(args.ckpt_dir, {"state": state})
             state = restored["state"]
-            data.load_state_dict(restored["data"])
+            data.load_state_dict(manifest["data"])
             start_step = int(manifest["step"])
             print(f"[train] restored step {start_step} from {args.ckpt_dir}",
                   flush=True)
+            if data.partition is not None:
+                print(f"[train] data partition restored: "
+                      f"{np.round(data.partition.weights, 3).tolist()}",
+                      flush=True)
+    if data.partition is not None and data.partition.n_hosts != H:
+        raise SystemExit(
+            f"[train] restored partition has {data.partition.n_hosts} hosts "
+            f"but --data-hosts is {H}; rerun with --data-hosts "
+            f"{data.partition.n_hosts}")
 
     # cost provider: where the schema's attribute fields come from.  The
     # analytic base (the estimates this driver used to inline) always
@@ -192,17 +238,25 @@ def main(argv=None) -> int:
           f"hbm_boundedness={step_costs.get('hbm_boundedness', 0.0):.3f}",
           flush=True)
 
-    # region tree for the instrumented step.  M = 1: the real single shard
-    # of this container.  M > 1: a simulated pod — rank 0's measured times
-    # are scaled by per-rank shard sizes (and the injected slow factor for
-    # the last rank), so external/straggler analysis and the closed
-    # rebalance/reshard loops run for real on synthetic-but-live data.
+    # region tree for the instrumented step.  Three rank layouts:
+    #   M = H = 1: the real single shard of this container.
+    #   M > 1: a simulated pod — rank 0's measured times are scaled by
+    #     per-rank shard sizes (and the injected slow factor for the last
+    #     rank), so external/straggler analysis and the closed
+    #     rebalance/reshard loops run for real on synthetic-but-live data.
+    #   H > 1: the REAL partitioned pipeline — every global batch is sliced
+    #     per host by the live Partition; each host's recorded io attribute
+    #     is its slice's actual bytes, and its times are the measured
+    #     globals attributed by real byte share (concurrent-host model:
+    #     hosts read/compute their slices in parallel at equal throughput,
+    #     so host h's wall is the global wall x its share).
     M = max(args.sim_ranks, 1)
+    R = M if M > 1 else H
     tree = RegionTree("train")
     for nm in region_names:
         tree.add(nm)
-    rec = RegionRecorder(tree, n_ranks=M, schema=args.schema,
-                         cost_provider=provider if M == 1 else None)
+    rec = RegionRecorder(tree, n_ranks=R, schema=args.schema,
+                         cost_provider=provider if R == 1 else None)
     ins = Instrumenter(rec, rank=0)
     rids = {tree.name(r): r for r in tree.ids()}
     # per-rank data-shard sizes (tokens per step).  Uniform unless
@@ -218,6 +272,21 @@ def main(argv=None) -> int:
         print(f"[train] simulated pod: {M} ranks, shards "
               f"{np.round(shard_tokens).astype(int).tolist()} tok/step",
               flush=True)
+    # H > 1 bookkeeping: this step's real per-host slice bytes/shares (set
+    # inside the data region, right after the split), the schema fields
+    # that carry the io role (they record REAL slice bytes, not
+    # provider-scaled estimates), and per-host wall attribution for the
+    # program clock.
+    step_bytes = np.zeros(H)
+    step_shares = np.full(H, 1.0 / H)
+    host_wall = np.zeros(H)
+    region_wall = {"sum": 0.0}
+    io_fields = tuple(f.name for f in rec.schema.fields if f.role == ROLE_IO)
+    if H > 1:
+        rows = data.partition.counts(args.batch)
+        print(f"[train] partitioned pipeline: {H} hosts, weights "
+              f"{np.round(data.partition.weights, 3).tolist()}, rows "
+              f"{rows.tolist()}/batch", flush=True)
     # rank 0's per-execution provider costs per region; rank r's shard is
     # f times rank 0's, so its SUM counters (bytes, flops) scale with f
     # while WMEAN ratios (boundedness) describe the kernel, not the size
@@ -227,8 +296,9 @@ def main(argv=None) -> int:
 
     @contextlib.contextmanager
     def region(name, *, instructions=0.0, nominal_cpi=None):
-        """Instrument one region for the whole (real or simulated) pod."""
-        if M == 1:
+        """Instrument one region for the whole (real, simulated, or
+        partitioned) pod."""
+        if M == 1 and H == 1:
             with ins.region(name, instructions=instructions,
                             nominal_cpi=nominal_cpi):
                 yield
@@ -242,40 +312,73 @@ def main(argv=None) -> int:
             instr = instructions
             if nominal_cpi is not None and not instr:
                 instr = cycles / nominal_cpi
-            for r in range(M):
-                f = shares[r] / max(shares[0], 1e-12)
-                s = sim["slow"] if r == M - 1 else 1.0
+            if M > 1:
+                for r in range(M):
+                    f = shares[r] / max(shares[0], 1e-12)
+                    s = sim["slow"] if r == M - 1 else 1.0
+                    attrs = {k: (v * f if k in sum_fields else v)
+                             for k, v in pvals[name].items()}
+                    # a sick host does the same work (instructions and byte
+                    # counters scale with its shard only), just slower
+                    # (times scale with s too)
+                    rec.add(r, rids[name], cpu_time=cpu * f * s,
+                            wall_time=wall * f * s, cycles=cycles * f * s,
+                            instructions=instr * f, **attrs)
+                return
+            # H > 1: attribute the measured globals by each host's REAL
+            # byte share of this step's split.  data/step work scales with
+            # the host's slice; checkpoint is the host-local shard write
+            # (1/H of the global each).  The io-role attribute of the data
+            # region carries the slice's actual bytes.
+            region_wall["sum"] += wall
+            for h in range(H):
+                f = (1.0 / H) if name == "checkpoint" else \
+                    float(step_shares[h])
+                s = sim["slow"] if h == H - 1 else 1.0
                 attrs = {k: (v * f if k in sum_fields else v)
                          for k, v in pvals[name].items()}
-                # a sick host does the same work (instructions and byte
-                # counters scale with its shard only), just slower (times
-                # scale with s too)
-                rec.add(r, rids[name], cpu_time=cpu * f * s,
+                if name == "data":
+                    for fld in io_fields:
+                        attrs[fld] = float(step_bytes[h])
+                rec.add(h, rids[name], cpu_time=cpu * f * s,
                         wall_time=wall * f * s, cycles=cycles * f * s,
                         instructions=instr * f, **attrs)
+                host_wall[h] += wall * f * s
 
     @contextlib.contextmanager
     def program():
-        if M == 1:
+        if M == 1 and H == 1:
             with ins.program():
                 yield
             return
         t0 = time.perf_counter()
+        if H > 1:
+            host_wall[:] = 0.0
+            region_wall["sum"] = 0.0
         try:
             yield
         finally:
             pw = time.perf_counter() - t0
-            for r in range(M):
-                f = shares[r] / max(shares[0], 1e-12)
-                s = sim["slow"] if r == M - 1 else 1.0
-                rec.add_program_wall(r, pw * f * s)
+            if M > 1:
+                for r in range(M):
+                    f = shares[r] / max(shares[0], 1e-12)
+                    s = sim["slow"] if r == M - 1 else 1.0
+                    rec.add_program_wall(r, pw * f * s)
+            else:
+                # each host's program wall = its attributed region walls
+                # plus an equal share of the untracked step overhead
+                over = max(pw - region_wall["sum"], 0.0) / H
+                for h in range(H):
+                    rec.add_program_wall(h, host_wall[h] + over)
 
     engine = None
     if args.policies:
         engine = PolicyEngine(make_policies(args.policies),
                               k=args.policy_window_k)
 
-    win_tokens = {}   # window index -> tokens it covered (for the rate line)
+    win_tokens = {}   # window label -> tokens it covered (for the rate line)
+    pod_rates = {}    # window index -> pod rate (tok/s)
+    fire_windows = []  # windows whose fired action repartitioned the pipeline
 
     def on_window(entry):
         verdict = entry.straggler_verdict()
@@ -291,25 +394,52 @@ def main(argv=None) -> int:
         if toks and entry.rank_cpu:
             present = [c for r, c in enumerate(entry.rank_cpu)
                        if r not in entry.gap_ranks]
-            line += (f" | pod rate {toks / max(max(present), 1e-9):,.0f} "
-                     f"tok/s")
+            rate = toks / max(max(present), 1e-9)
+            pod_rates[entry.index] = rate
+            line += f" | pod rate {rate:,.0f} tok/s"
         print(line + f" | {verdict.render().splitlines()[0]}", flush=True)
         if engine is not None:
             for d in engine.log.for_window(entry.index):
                 print(f"[policy] {d.render()}", flush=True)
 
+    def actuate_partition(act, part):
+        """Repartition the LIVE pipeline and leave the audit line that ties
+        the actuation to its PolicyLog entry (policy/kind/window/evidence
+        match ``Decision.render``)."""
+        before = np.round(data.partition.weights, 3).tolist()
+        fire_windows.append(act.window)
+        data.set_partition(part)
+        after = np.round(data.partition.weights, 3).tolist()
+        rows = data.partition.counts(args.batch).tolist()
+        print(f"[actuate] {act.policy}/{act.kind} @w{act.window} "
+              f"evidence={list(act.evidence)}: pipeline partition "
+              f"{before} -> {after} (rows {rows}/batch)", flush=True)
+
     def apply_actions(actions):
         nonlocal shares, shard_tokens
         for act in actions:
-            if act.kind == "rebalance" and "weights" in act.params:
-                w = np.asarray(act.params["weights"], dtype=np.float64)
-                if w.sum() > 0:
-                    shares = w / w.sum()
-                    shard_tokens = shares * tokens_per_step
+            if act.kind == "rebalance" and \
+                    act.rebalance_weights is not None:
+                w = np.asarray(act.rebalance_weights, dtype=np.float64)
+                if w.sum() <= 0:
+                    continue
+                if H > 1:
+                    # actuate for real: the fired weight vector becomes the
+                    # live pipeline's partition — slow hosts read less of
+                    # every following global batch
+                    actuate_partition(act, w)
+                    continue
+                shares = w / w.sum()
+                shard_tokens = shares * tokens_per_step
                 print(f"[policy] applied rebalance from window {act.window}: "
                       f"shares -> {np.round(shares, 3).tolist()}", flush=True)
             elif act.kind == "reshard":
-                if M > 1:
+                if H > 1:
+                    # actuate for real: a work-imbalance core means the
+                    # partition itself is skewed — repartition the live
+                    # pipeline back to uniform
+                    actuate_partition(act, Partition.uniform(H))
+                elif M > 1:
                     # actuate: repartition the simulated shards to uniform —
                     # the fix for a skewed partition (work imbalance), as
                     # opposed to rebalance's speed-weighted shares
@@ -368,22 +498,33 @@ def main(argv=None) -> int:
         for step in range(start_step, args.steps):
             injecting = args.inject_bottleneck_at and \
                 step + 1 >= args.inject_bottleneck_at
-            sim["slow"] = args.inject_factor if (M > 1 and injecting) else 1.0
+            sim["slow"] = args.inject_factor \
+                if ((M > 1 or H > 1) and injecting) else 1.0
             with program():
                 # attribute fields come from the attached cost provider
-                # (M > 1: pulled and shard-scaled by the sim's region())
+                # (M > 1: pulled and shard-scaled by the sim's region();
+                # H > 1: scaled by each host's real slice-byte share)
                 with region("data", nominal_cpi=1.0):
-                    if injecting and M == 1:
+                    if injecting and M == 1 and H == 1:
                         burn(args.inject_ms)
                     batch = data.next_prefetched()
+                    if H > 1:
+                        # the real actuation surface: slice the global
+                        # batch by the LIVE partition; this step's
+                        # per-host attribution follows the actual bytes
+                        host_batches = data.split(batch)
+                        step_bytes[:] = [
+                            sum(int(v.nbytes) for v in hb.values())
+                            for hb in host_batches]
+                        step_shares[:] = step_bytes / step_bytes.sum()
                     batch = {k: jnp.asarray(v) for k, v in batch.items()}
                 with region("step", instructions=flops_per_step):
                     state, metrics = jitted(state, batch)
                     loss = float(metrics["loss"])
                 with region("checkpoint", nominal_cpi=1.0):
                     if saver and (step + 1) % args.ckpt_every == 0:
-                        saver.save(step + 1, {"state": state,
-                                              "data": data.state_dict()})
+                        saver.save(step + 1, {"state": state},
+                                   extra={"data": data.state_dict()})
             losses.append(loss)
             if pipeline is not None:
                 # poll every step (one lock acquire): a fire lands in the
@@ -423,9 +564,24 @@ def main(argv=None) -> int:
         print(f"[train] policy log ({len(engine.log)} decision(s), "
               f"{len(engine.log.fired())} fired):", flush=True)
         print(engine.log.render(10), flush=True)
+    if H > 1 and fire_windows and pod_rates:
+        # before/after pod-rate verdict for the actuation demo: "pre" is
+        # the firing window (its steps ran under the old partition — the
+        # repartition lands between windows), "post" the best of the final
+        # two windows
+        fw = fire_windows[0]
+        pre_idx = max((i for i in pod_rates if i <= fw),
+                      default=min(pod_rates))
+        post = max(v for i, v in pod_rates.items()
+                   if i >= max(pod_rates) - 1)
+        verdict = "improved" if post > pod_rates[pre_idx] else "regressed"
+        print(f"[train] pod rate pre-fire {pod_rates[pre_idx]:,.0f} tok/s "
+              f"(window {pre_idx}) -> post {post:,.0f} tok/s: {verdict}",
+              flush=True)
     if saver:
-        saver.save(args.steps, {"state": state, "data": data.state_dict()})
-        saver.wait()
+        saver.save(args.steps, {"state": state},
+                   extra={"data": data.state_dict()})
+        saver.wait()                 # re-raises if the background write failed
         print(f"[train] final checkpoint at {saver.last_path}", flush=True)
     ok = len(losses) >= 2 and losses[-1] < losses[0] and np.isfinite(losses[-1])
     print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "

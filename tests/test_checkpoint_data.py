@@ -74,6 +74,88 @@ class TestCheckpoint:
         saver.wait()
         assert ckpt.latest_step(tmp_path) == 5
 
+    def test_reserved_extra_keys_rejected(self, tmp_path):
+        st = state_tree()
+        with pytest.raises(ValueError, match="reserved"):
+            ckpt.save(tmp_path, 1, st, extra={"step": 99})
+        with pytest.raises(ValueError, match="reserved"):
+            ckpt.save(tmp_path, 1, st, extra={"total_bytes": 0, "data": {}})
+        # nothing half-written
+        assert ckpt.latest_step(tmp_path) is None
+
+    def test_resave_is_atomic_under_commit_failure(self, tmp_path,
+                                                   monkeypatch):
+        """Re-saving step N must never pass through a no-valid-checkpoint
+        window: if the tmp->final commit fails, the previous step_N comes
+        back intact and restorable."""
+        st = state_tree()
+        ckpt.save(tmp_path, 4, st, extra={"gen": 1})
+
+        real_rename = pathlib.Path.rename
+
+        def failing_rename(self, target):
+            if self.name.startswith(".tmp_step_") and \
+                    pathlib.Path(target).name == "step_4":
+                raise OSError("injected commit failure")
+            return real_rename(self, target)
+
+        monkeypatch.setattr(pathlib.Path, "rename", failing_rename)
+        with pytest.raises(OSError, match="injected"):
+            ckpt.save(tmp_path, 4, st, extra={"gen": 2})
+        monkeypatch.undo()
+
+        # the original checkpoint was rolled back into place and still loads
+        restored, manifest = ckpt.restore(tmp_path, st, step=4)
+        assert manifest["gen"] == 1
+        np.testing.assert_array_equal(np.asarray(st["params"]["w"]),
+                                      restored["params"]["w"])
+
+    def test_resave_leaves_no_stray_dirs(self, tmp_path):
+        st = state_tree()
+        ckpt.save(tmp_path, 7, st, extra={"gen": 1})
+        ckpt.save(tmp_path, 7, st, extra={"gen": 2})
+        names = sorted(p.name for p in pathlib.Path(tmp_path).iterdir())
+        assert names == ["step_7"]
+        _, manifest = ckpt.restore(tmp_path, st)
+        assert manifest["gen"] == 2
+
+    def test_gc_sweeps_crashed_save_leftovers(self, tmp_path):
+        st = state_tree()
+        (pathlib.Path(tmp_path)).mkdir(exist_ok=True)
+        (pathlib.Path(tmp_path) / ".tmp_step_3_123").mkdir()
+        (pathlib.Path(tmp_path) / ".old_step_3_456").mkdir()
+        ckpt.save(tmp_path, 9, st)
+        names = sorted(p.name for p in pathlib.Path(tmp_path).iterdir())
+        assert names == ["step_9"]
+
+    def test_async_save_failure_reraised_from_wait(self, tmp_path):
+        """A background save that dies must not be silent: wait() re-raises
+        the worker's exception, and the poison clears after one raise."""
+        poison = pathlib.Path(tmp_path) / "not_a_dir"
+        poison.write_text("file blocking mkdir -p")
+        saver = ckpt.AsyncCheckpointer(poison / "ckpts")
+        saver.save(1, state_tree())
+        with pytest.raises(Exception):
+            saver.wait()
+        assert saver.last_path is None
+        saver.wait()                       # cleared: second wait is a no-op
+
+    def test_async_save_failure_reraised_from_next_save(self, tmp_path):
+        """The train loop's periodic saver.save() is the natural surface:
+        a failed in-flight save surfaces there, before new work starts."""
+        poison = pathlib.Path(tmp_path) / "not_a_dir"
+        poison.write_text("file blocking mkdir -p")
+        saver = ckpt.AsyncCheckpointer(poison / "ckpts")
+        st = state_tree()
+        saver.save(1, st)
+        with pytest.raises(Exception):
+            saver.save(2, st)
+        # recovery: point nothing at the poison path anymore
+        ok = ckpt.AsyncCheckpointer(tmp_path)
+        ok.save(3, st)
+        ok.wait()
+        assert ckpt.latest_step(tmp_path) == 3
+
 
 class TestDataPipeline:
     def test_deterministic_across_instances(self):
@@ -113,6 +195,36 @@ class TestDataPipeline:
         d = SyntheticTokens(1000, 2, 8, seed=0)
         assert not np.array_equal(d.batch_at(0)["tokens"],
                                   d.batch_at(1)["tokens"])
+
+    def test_stop_prefetch_joins_worker(self):
+        d = SyntheticTokens(500, 2, 8, seed=0)
+        d.start_prefetch()
+        t = d._thread
+        assert t.is_alive()
+        d.stop_prefetch()
+        assert not t.is_alive()            # joined, not abandoned
+        assert d._thread is None and d._q is None and d._stop is None
+        d.stop_prefetch()                  # idempotent
+
+    def test_restore_under_active_prefetch_no_stale_batches(self):
+        """Regression: restoring to a distant step while prefetch is active
+        must never deliver batches generated by the superseded worker.  The
+        old worker closed over the old queue, so after load_state_dict the
+        very next prefetched batch is the restored step's batch — repeatedly,
+        to shake out any startup/teardown interleaving."""
+        for trial in range(10):
+            d = SyntheticTokens(500, 2, 8, seed=4)
+            d.start_prefetch()
+            try:
+                d.next_prefetched()        # let the old generation run
+                target = 50 + trial * 10   # far from the prefetch horizon
+                d.load_state_dict({"step": target, "bytes_read": 0})
+                for k in range(3):
+                    got = d.next_prefetched()
+                    np.testing.assert_array_equal(
+                        got["tokens"], d.batch_at(target + k)["tokens"])
+            finally:
+                d.stop_prefetch()
 
 
 class TestOptimizer:

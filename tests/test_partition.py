@@ -1,0 +1,206 @@
+"""Partition-aware pipeline: weights -> slice arithmetic, live
+repartitioning (the policy actuation surface), checkpoint round-trip of
+{partition, step, bytes_read} through the manifest, and actuation visibly
+changing per-host io counters in recorded snapshots."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import Partition, SyntheticTokens
+
+
+class TestPartitionArithmetic:
+    def test_weights_normalized(self):
+        p = Partition([3.0, 1.0])
+        np.testing.assert_allclose(p.weights, [0.75, 0.25])
+        assert p.n_hosts == 2
+
+    @pytest.mark.parametrize("bad", [
+        [], [[1.0, 2.0]], [1.0, -0.5], [np.nan, 1.0], [np.inf, 1.0],
+        [0.0, 0.0],
+    ])
+    def test_invalid_weights_rejected(self, bad):
+        with pytest.raises(ValueError):
+            Partition(bad)
+
+    def test_counts_sum_preserved(self):
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            n = int(rng.integers(1, 9))
+            w = rng.random(n) + 1e-3
+            batch = int(rng.integers(0, 65))
+            counts = Partition(w).counts(batch)
+            assert counts.sum() == batch
+            assert np.all(counts >= 0)
+
+    def test_counts_largest_remainder(self):
+        assert Partition([3, 1]).counts(8).tolist() == [6, 2]
+        assert Partition([1, 1, 1]).counts(7).tolist() == [3, 2, 2]
+        # ties break toward the lower host index
+        assert Partition([1, 1]).counts(3).tolist() == [2, 1]
+
+    def test_counts_min_one_row_when_batch_covers_hosts(self):
+        counts = Partition([100, 1, 1, 1]).counts(4)
+        assert counts.sum() == 4
+        assert np.all(counts >= 1)
+        # under an extreme skew the dominant host cedes rows, lowest
+        # starved index first
+        assert counts.tolist() == [1, 1, 1, 1]
+
+    def test_counts_batch_smaller_than_hosts(self):
+        counts = Partition([1, 1, 1, 1]).counts(2)
+        assert counts.sum() == 2      # no min-quota possible: sum still exact
+
+    def test_counts_deterministic(self):
+        w = [0.31, 0.17, 0.52]
+        a = Partition(w).counts(13)
+        b = Partition(list(w)).counts(13)
+        np.testing.assert_array_equal(a, b)
+
+    def test_bounds_contiguous_and_cover(self):
+        p = Partition([2, 1, 1])
+        bounds = p.bounds(10)
+        assert bounds[0][0] == 0 and bounds[-1][1] == 10
+        for (a, b), (c, d) in zip(bounds, bounds[1:]):
+            assert b == c and a <= b and c <= d
+
+    def test_uniform(self):
+        p = Partition.uniform(4)
+        assert p.counts(8).tolist() == [2, 2, 2, 2]
+        with pytest.raises(ValueError):
+            Partition.uniform(0)
+
+
+class TestPipelineSplit:
+    def test_split_reconstructs_global_batch(self):
+        d = SyntheticTokens(500, 8, 16, seed=1, partition=Partition([3, 1]))
+        b = next(d)
+        parts = d.split(b)
+        assert [len(p["tokens"]) for p in parts] == [6, 2]
+        for key in ("tokens", "labels"):
+            np.testing.assert_array_equal(
+                np.concatenate([p[key] for p in parts]), b[key])
+
+    def test_split_accounts_real_host_bytes(self):
+        d = SyntheticTokens(500, 8, 16, seed=1, partition=Partition([3, 1]))
+        parts = d.split(next(d))
+        want = [sum(int(v.nbytes) for v in p.values()) for p in parts]
+        assert d.state.host_bytes == want
+        assert want[0] == 3 * want[1]     # 6 rows vs 2 rows
+        d.split(next(d))
+        assert d.state.host_bytes == [2 * w for w in want]  # cumulative
+
+    def test_host_batch_at_deterministic_per_step_host(self):
+        a = SyntheticTokens(500, 8, 16, seed=7, partition=Partition([1, 3]))
+        b = SyntheticTokens(500, 8, 16, seed=7, partition=Partition([1, 3]))
+        for step in (0, 5):
+            for h in (0, 1):
+                np.testing.assert_array_equal(
+                    a.host_batch_at(step, h)["tokens"],
+                    b.host_batch_at(step, h)["tokens"])
+        # and it is exactly the split slice of the global batch
+        parts = a.split(a.batch_at(2))
+        np.testing.assert_array_equal(parts[1]["tokens"],
+                                      a.host_batch_at(2, 1)["tokens"])
+
+    def test_unpartitioned_split_is_identity(self):
+        d = SyntheticTokens(500, 4, 8)
+        b = next(d)
+        assert d.split(b) == [b]
+        assert d.state.host_bytes == []
+        with pytest.raises(IndexError):
+            d.host_batch_at(0, 1)
+
+    def test_live_repartition_changes_next_split(self):
+        """The actuation path: set_partition mid-stream reslices the next
+        batch (and only the next — already-split batches are untouched)."""
+        d = SyntheticTokens(500, 8, 16, partition=Partition([3, 1]))
+        first = d.split(next(d))
+        assert [len(p["tokens"]) for p in first] == [6, 2]
+        d.set_partition(Partition.uniform(2))
+        second = d.split(next(d))
+        assert [len(p["tokens"]) for p in second] == [4, 4]
+        assert len(d.state.host_bytes) == 2   # same host count: kept counters
+
+    def test_host_count_change_resets_counters(self):
+        d = SyntheticTokens(500, 8, 16, partition=Partition([1, 1]))
+        d.split(next(d))
+        assert any(d.state.host_bytes)
+        d.set_partition(Partition.uniform(4))
+        assert d.state.host_bytes == [0, 0, 0, 0]
+
+
+class TestPartitionCheckpoint:
+    def test_state_dict_json_safe_roundtrip(self):
+        d = SyntheticTokens(500, 8, 16, seed=3, partition=Partition([3, 1]))
+        d.split(next(d))
+        d.split(next(d))
+        sd = json.loads(json.dumps(d.state_dict()))   # manifest-safe
+        d2 = SyntheticTokens(500, 8, 16, seed=3)
+        d2.load_state_dict(sd)
+        assert d2.partition == d.partition
+        assert d2.state.step == 2
+        assert d2.state.host_bytes == d.state.host_bytes
+        np.testing.assert_array_equal(next(d2)["tokens"], next(d)["tokens"])
+
+    def test_load_pre_partition_state_dict(self):
+        """Old-format dicts (no partition/host_bytes keys) still load."""
+        d = SyntheticTokens(500, 4, 8, partition=Partition([1, 1]))
+        d.load_state_dict({"step": 5, "bytes_read": 123})
+        assert d.partition is None and d.state.step == 5
+
+    def test_partition_rides_checkpoint_manifest(self, tmp_path):
+        """The end-to-end persistence contract: {partition, step,
+        bytes_read} thread through ckpt.save(extra=...)'s manifest and a
+        restore resumes with the actuated weights."""
+        d = SyntheticTokens(500, 8, 16, seed=9, partition=Partition([3, 1]))
+        d.split(next(d))
+        d.set_partition(Partition.uniform(2))         # the actuation
+        d.split(next(d))
+        state = {"w": np.arange(4.0)}
+        ckpt.save(tmp_path, 2, {"state": state},
+                  extra={"data": d.state_dict()})
+
+        restored, manifest = ckpt.restore(tmp_path, {"state": state})
+        d2 = SyntheticTokens(500, 8, 16, seed=9)
+        d2.load_state_dict(manifest["data"])
+        assert d2.partition == Partition.uniform(2)   # survived the restore
+        assert d2.state.step == 2
+        assert d2.state.host_bytes == d.state.host_bytes
+        np.testing.assert_array_equal(
+            d2.split(next(d2))[0]["tokens"], d.split(next(d))[0]["tokens"])
+
+
+class TestActuationVisibleInRecords:
+    def test_repartition_changes_recorded_host_io(self):
+        """Satellite contract: an actuation changes the per-host io/token
+        counters that land in recorded snapshots — window k is skewed 3:1,
+        the repartition happens, window k+1 records 1:1."""
+        from repro.core import RegionTree
+        from repro.perfdbg import RegionRecorder
+
+        d = SyntheticTokens(500, 8, 16, partition=Partition([3, 1]))
+        tree = RegionTree("t")
+        tree.add("data")
+        rid = next(iter(tree.ids()))
+        rec = RegionRecorder(tree, n_ranks=2)
+
+        def record_window():
+            base = list(d.state.host_bytes)
+            parts = d.split(next(d))
+            for h in range(2):
+                rec.add(h, rid, cpu_time=1.0, wall_time=1.0,
+                        disk_io=d.state.host_bytes[h] - base[h])
+                rec.add_program_wall(h, 1.0)
+            return rec.reset_window()
+
+        skewed = record_window()
+        d.set_partition(Partition.uniform(2))         # fired action lands
+        uniform = record_window()
+
+        io_before = skewed.attributes()["disk_io"][:, 0]
+        io_after = uniform.attributes()["disk_io"][:, 0]
+        assert io_before[0] == 3 * io_before[1]
+        assert io_after[0] == io_after[1] > 0
