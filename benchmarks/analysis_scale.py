@@ -165,6 +165,12 @@ def run_sweep(ms, reps: int) -> dict:
 
 def check_regressions(current: dict, baseline_path: pathlib.Path,
                       factor: float) -> int:
+    if not baseline_path.exists():
+        # a brand-new bench has no baseline yet: the first gated run records
+        # it (via --out) instead of failing — no hand-editing required
+        print(f"# baseline {baseline_path.name} missing: nothing to check "
+              "(commit the current results to create it)", file=sys.stderr)
+        return 0
     baseline = json.loads(baseline_path.read_text())
     if factor <= 0:
         print("# PERF_SMOKE_FACTOR <= 0: regression gate disabled",
@@ -175,6 +181,13 @@ def check_regressions(current: dict, baseline_path: pathlib.Path,
               if not name.startswith("_")
               and isinstance(current[name], (int, float))
               and isinstance(baseline[name], (int, float))]
+    new = [name for name in sorted(set(current) - set(baseline))
+           if not name.startswith("_")]
+    if new:
+        # informational: new entries are gated only once the baseline
+        # carrying them is committed
+        print(f"# {len(new)} entries not in baseline (ungated): "
+              + ", ".join(new), file=sys.stderr)
     for name in shared:
         cur, base = current[name], baseline[name]
         # 1ms absolute slack: sub-millisecond entries are scheduler noise

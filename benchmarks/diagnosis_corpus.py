@@ -1,0 +1,195 @@
+"""Strategy-vs-strategy diagnosis accuracy over the fault-labeled corpus.
+
+Loads a written diagnosis corpus (default: the checked-in mini-corpus under
+``tests/data/corpus/``), splits it deterministically (even case indices
+calibrate, odd evaluate), calibrates the threshold strategy and trains the
+learned one on the calibration half, then scores all three strategies on
+the evaluation half against the ground-truth labels:
+
+* ``{strategy}_accuracy``        — bottleneck-kind accuracy
+* ``{strategy}_precision_{kind}`` / ``{strategy}_recall_{kind}``
+                                 — per-kind, over the evaluation split
+* ``{strategy}_region_acc``      — labeled region in the predicted region
+                                   set (region-localized faults only)
+* ``{strategy}_rank_acc``        — predicted rank set == labeled rank set
+
+Results land in ``BENCH_8.json`` (``_meta`` records the result schema, the
+session's default strategy name, and the corpus provenance).  ``--check``
+gates against a committed baseline: any metric below baseline minus the
+strategy's tolerance fails, as does a ``_meta`` schema drift — a missing
+baseline file or metric is reported but tolerated, so a new strategy's
+first gated run needs no hand-editing.
+
+Usage:
+
+    PYTHONPATH=src python -m benchmarks.diagnosis_corpus            # report
+    PYTHONPATH=src python -m benchmarks.diagnosis_corpus \
+        --check BENCH_8.json                                        # CI gate
+    PYTHONPATH=src python -m benchmarks.diagnosis_corpus \
+        --corpus /tmp/corpus --out /tmp/bench.json                  # custom
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_CORPUS = REPO_ROOT / "tests" / "data" / "corpus"
+DEFAULT_OUT = REPO_ROOT / "BENCH_8.json"
+SCHEMA = "diagnosis_corpus/accuracy/v1"
+
+#: Allowed drop below baseline per strategy.  The rough and threshold paths
+#: are exactly deterministic over the checked-in corpus; the learned model
+#: trains in float32 under jax (float64 under the numpy fallback), so its
+#: metrics get a small cross-backend tolerance.
+TOLERANCE = {"rough": 0.0, "threshold": 0.0, "learned": 0.05}
+
+
+def evaluate(strategy, entries, labels) -> dict:
+    """Score one strategy over aligned (entry, label) sequences."""
+    from repro.core.diagnosis import DIAGNOSIS_KINDS
+    n = len(entries)
+    kind_hits = rank_hits = region_hits = region_total = 0
+    tp = {k: 0 for k in DIAGNOSIS_KINDS}
+    fp = {k: 0 for k in DIAGNOSIS_KINDS}
+    fn = {k: 0 for k in DIAGNOSIS_KINDS}
+    for entry, label in zip(entries, labels):
+        diag = strategy.diagnose(entry)
+        truth = str(label["kind"])
+        if diag.kind == truth:
+            kind_hits += 1
+            tp[truth] += 1
+        else:
+            fp[diag.kind] += 1
+            fn[truth] += 1
+        if set(diag.ranks) == {int(r) for r in label["ranks"]}:
+            rank_hits += 1
+        if label["region_id"] is not None:
+            region_total += 1
+            if int(label["region_id"]) in diag.regions:
+                region_hits += 1
+    out = {
+        "accuracy": kind_hits / n,
+        "rank_acc": rank_hits / n,
+        "region_acc": region_hits / region_total if region_total else 1.0,
+    }
+    for k in DIAGNOSIS_KINDS:
+        if tp[k] + fn[k] == 0:      # kind absent from the evaluation split
+            continue
+        out[f"precision_{k}"] = tp[k] / (tp[k] + fp[k]) \
+            if tp[k] + fp[k] else 0.0
+        out[f"recall_{k}"] = tp[k] / (tp[k] + fn[k])
+    return out
+
+
+def run_benchmark(corpus_dir: pathlib.Path) -> dict:
+    from repro.core.diagnosis import RoughSetStrategy
+    from repro.perfdbg.corpus import (calibrate_thresholds, case_entry,
+                                      fit_learned, load_corpus, split_corpus)
+
+    cases = load_corpus(corpus_dir)
+    calib, evaln = split_corpus(cases)
+    print(f"# corpus {corpus_dir}: {len(cases)} cases "
+          f"({len(calib)} calibrate, {len(evaln)} evaluate)",
+          file=sys.stderr)
+
+    calib_entries = [case_entry(c) for c in calib]
+    samples = [(e.features, c.label) for e, c in zip(calib_entries, calib)]
+    strategies = {
+        "rough": RoughSetStrategy(),
+        "threshold": calibrate_thresholds(samples),
+        "learned": fit_learned(samples),
+    }
+
+    eval_entries = [case_entry(c) for c in evaln]
+    eval_labels = [c.label for c in evaln]
+    results = {}
+    for name, strategy in strategies.items():
+        metrics = evaluate(strategy, eval_entries, eval_labels)
+        for key, value in metrics.items():
+            results[f"{name}_{key}"] = round(value, 4)
+        print(f"# {name}: accuracy={metrics['accuracy']:.3f} "
+              f"region={metrics['region_acc']:.3f} "
+              f"rank={metrics['rank_acc']:.3f}", file=sys.stderr)
+
+    results["_meta"] = {
+        "schema": SCHEMA,
+        "strategy": RoughSetStrategy.name,     # the session default
+        "strategies": sorted(strategies),
+        "corpus": {"cases": len(cases), "calibrate": len(calib),
+                   "evaluate": len(evaln)},
+    }
+    return results
+
+
+def check_baseline(current: dict, baseline_path: pathlib.Path,
+                   baseline: dict = None) -> int:
+    """Gate: no metric may drop below baseline minus the strategy's
+    tolerance; the result schema must not drift.  Missing baseline file or
+    baseline-absent metrics are notices, not failures.  ``baseline`` may be
+    pre-loaded (main() snapshots it before ``--out`` can overwrite a shared
+    path); otherwise it is read from ``baseline_path``."""
+    if baseline is None:
+        if not baseline_path.exists():
+            print(f"# baseline {baseline_path.name} missing: nothing to "
+                  "check (commit the current results to create it)",
+                  file=sys.stderr)
+            return 0
+        baseline = json.loads(baseline_path.read_text())
+    failures = []
+    base_schema = baseline.get("_meta", {}).get("schema")
+    if base_schema != SCHEMA:
+        failures.append(f"_meta.schema drifted: current {SCHEMA!r} vs "
+                        f"baseline {base_schema!r}")
+    metrics = [k for k in sorted(current)
+               if not k.startswith("_") and isinstance(current[k],
+                                                       (int, float))]
+    new = [k for k in metrics if k not in baseline]
+    if new:
+        print(f"# {len(new)} metrics not in baseline (ungated): "
+              + ", ".join(new), file=sys.stderr)
+    checked = 0
+    for key in metrics:
+        if key not in baseline:
+            continue
+        checked += 1
+        tol = TOLERANCE.get(key.split("_", 1)[0], 0.0)
+        cur, base = float(current[key]), float(baseline[key])
+        if cur < base - tol:
+            failures.append(f"{key}: {cur:.4f} < baseline {base:.4f} "
+                            f"(tolerance {tol:g})")
+    for f in failures:
+        print(f"REGRESSION {f}")
+    print(f"# checked {checked} metrics against {baseline_path.name}, "
+          f"{len(failures)} regressions")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--corpus", type=pathlib.Path, default=DEFAULT_CORPUS,
+                    help=f"corpus directory (default {DEFAULT_CORPUS})")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT,
+                    help=f"output JSON (default {DEFAULT_OUT.name})")
+    ap.add_argument("--check", type=pathlib.Path, default=None,
+                    help="baseline JSON to gate against")
+    args = ap.parse_args()
+
+    # snapshot the baseline first: --out may legitimately point at the
+    # baseline path (refreshing it), and the gate must compare against the
+    # committed numbers, not the just-written ones
+    baseline = None
+    if args.check is not None and args.check.exists():
+        baseline = json.loads(args.check.read_text())
+
+    results = run_benchmark(args.corpus)
+    args.out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {len(results)} entries to {args.out}", file=sys.stderr)
+
+    if args.check is not None:
+        return check_baseline(results, args.check, baseline)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

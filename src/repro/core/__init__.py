@@ -15,6 +15,12 @@ from .analyzer import (AnalysisReport, AutoAnalyzer, Measurements,
                        PAPER_ATTRIBUTES, RootCauseReport, analyze,
                        external_root_causes, fingerprint_arrays,
                        internal_root_causes)
+from .diagnosis import (BUILTIN_STRATEGIES, DIAGNOSIS_KINDS, Diagnosis,
+                        DiagnosisStrategy, FEATURE_NAMES, KIND_COMPUTE,
+                        KIND_DATA_SKEW, KIND_IO, KIND_MEMORY, KIND_NETWORK,
+                        KIND_NONE, LearnedStrategy, RoughSetStrategy,
+                        ThresholdStrategy, WindowFeatures, window_features,
+                        work_imbalance_attrs)
 from .external import (CCRNode, COLLAPSE_AUTO, COLLAPSE_EXACT, COLLAPSE_MODES,
                        COLLAPSE_QUANTIZED, CollapseCertificate, ExternalReport,
                        analyze_external)
@@ -40,6 +46,11 @@ from .vectors import (canonical_partition, keep_columns, lengths,
                       pairwise_distances, severity_S, zero_columns)
 
 __all__ = [
+    "BUILTIN_STRATEGIES", "DIAGNOSIS_KINDS", "Diagnosis", "DiagnosisStrategy",
+    "FEATURE_NAMES", "KIND_COMPUTE", "KIND_DATA_SKEW", "KIND_IO",
+    "KIND_MEMORY", "KIND_NETWORK", "KIND_NONE", "LearnedStrategy",
+    "RoughSetStrategy", "ThresholdStrategy", "WindowFeatures",
+    "window_features", "work_imbalance_attrs",
     "Action", "BUILTIN_POLICIES", "CollectorQuarantinePolicy", "Decision",
     "Policy", "PolicyEngine", "PolicyLog", "RebalancePolicy", "ReshardPolicy",
     "make_policies",

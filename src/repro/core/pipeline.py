@@ -99,7 +99,7 @@ class AsyncAnalysisSession:
                  policy_engine=None, reuse: bool = True,
                  internal_gate_s: Optional[float] = None,
                  workers: int = 1, collapse: Optional[str] = None,
-                 column_workers: Optional[int] = None):
+                 column_workers: Optional[int] = None, strategy=None):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(f"backpressure must be one of "
                              f"{BACKPRESSURE_POLICIES}, got {backpressure!r}")
@@ -111,11 +111,12 @@ class AsyncAnalysisSession:
                                     or not reuse
                                     or internal_gate_s is not None
                                     or collapse is not None
-                                    or column_workers is not None):
+                                    or column_workers is not None
+                                    or strategy is not None):
             raise ValueError(
                 "session= conflicts with keep_windows/reuse/internal_gate_s/"
-                "collapse/column_workers — configure the AnalysisSession you "
-                "pass in instead")
+                "collapse/column_workers/strategy — configure the "
+                "AnalysisSession you pass in instead")
         self.tree = tree
         if session is not None:
             self._session = session
@@ -125,6 +126,8 @@ class AsyncAnalysisSession:
                 kw["collapse"] = collapse
             if column_workers is not None:
                 kw["column_workers"] = column_workers
+            if strategy is not None:
+                kw["strategy"] = strategy
             self._session = AnalysisSession(tree, keep_windows, reuse=reuse,
                                             internal_gate_s=internal_gate_s,
                                             **kw)

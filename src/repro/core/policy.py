@@ -43,6 +43,7 @@ from typing import (Dict, Hashable, List, Mapping, Optional, Sequence, Tuple)
 
 import numpy as np
 
+from .diagnosis import KIND_DATA_SKEW, work_imbalance_attrs
 from .roughset import ROLE_WORK
 from .session import AnalysisSession, WindowEntry
 
@@ -223,7 +224,18 @@ class ReshardPolicy(Policy):
     bottleneck, even when a co-varying attribute (e.g. the I/O bytes of the
     same oversized shard) ties with it.  ``scopes`` defaults to external
     only: an *internal* core naming work merely says a region is
-    compute-heavy, which is not an imbalance signal."""
+    compute-heavy, which is not an imbalance signal.
+
+    When the entry carries a :class:`~repro.core.diagnosis.Diagnosis` and
+    this policy runs at its default configuration, the strategy's verdict
+    *is* the trigger: the policy proposes exactly when ``diagnosis.kind``
+    is ``data_skew``.  The default :class:`~repro.core.diagnosis.
+    RoughSetStrategy` computes that kind with the shared
+    :func:`~repro.core.diagnosis.work_imbalance_attrs` test — the same
+    test the legacy path below runs — so decisions are identical with the
+    consumption on or off.  A non-default configuration (custom role,
+    scopes, or fallback) keeps reading the cores directly: the diagnosis
+    vocabulary does not cover arbitrary role/scope pairings."""
 
     name = "reshard"
 
@@ -231,22 +243,27 @@ class ReshardPolicy(Policy):
                  scopes: Tuple[str, ...] = ("external",),
                  fallback_attr: str = "instructions"):
         self.role = role
-        self.scopes = scopes
+        self.scopes = tuple(scopes)
         self.fallback_attr = fallback_attr
+        self._kind_gated = (role == ROLE_WORK
+                            and self.scopes == ("external",)
+                            and fallback_attr == "instructions")
 
     def _work_attrs(self, entry: WindowEntry, which: str) -> Tuple[str, ...]:
-        named = sorted({a for core in entry.core_alternatives(which)
-                        for a in core})
-        matched = tuple(a for a in named
-                        if entry.role_of(a, which) == self.role)
-        if matched:
-            return matched
-        if any(entry.role_of(a, which) is not None for a in named):
-            return ()          # roles declared; none of them is work
-        return tuple(a for a in named if a == self.fallback_attr)
+        return work_imbalance_attrs(entry, which, role=self.role,
+                                    fallback_attr=self.fallback_attr)
 
     def observe(self, entry: WindowEntry,
                 session: AnalysisSession) -> List[Action]:
+        diag = getattr(entry, "diagnosis", None)
+        if diag is not None and self._kind_gated:
+            if diag.kind != KIND_DATA_SKEW:
+                return []
+            attrs = tuple(a for a, _ in diag.evidence) or (self.fallback_attr,)
+            return [Action(kind="reshard", target=attrs[0],
+                           params={"scopes": ("external",), "role": self.role,
+                                   "external_core": entry.core_attributes("external"),
+                                   "internal_core": entry.core_attributes("internal")})]
         hits = {w: self._work_attrs(entry, w) for w in self.scopes}
         scopes = tuple(w for w in self.scopes if hits[w])
         if not scopes:

@@ -38,6 +38,8 @@ import numpy as np
 from .analyzer import (AnalysisReport, Measurements, RootCauseReport,
                        external_root_causes, fingerprint_arrays,
                        internal_root_causes)
+from .diagnosis import (Diagnosis, DiagnosisStrategy, RoughSetStrategy,
+                        WindowFeatures, window_features)
 from .external import COLLAPSE_AUTO, COLLAPSE_EXACT, COLLAPSE_MODES, \
     analyze_external
 from .internal import InternalReport, analyze_internal, crnm
@@ -78,6 +80,10 @@ def analyze_window(tree: RegionTree, measurements: Measurements,
                                           collapse=collapse,
                                           column_workers=column_workers)
     return report
+
+
+def _strategy_salt(strategy: Optional[DiagnosisStrategy]) -> str:
+    return getattr(strategy, "name", "") if strategy is not None else ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,7 +134,8 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
                            keep_memo: bool = True,
                            roles: Optional[Mapping[str, str]] = None,
                            collapse: str = COLLAPSE_AUTO,
-                           column_workers: int = 1
+                           column_workers: int = 1,
+                           strategy_salt: str = ""
                            ) -> Tuple[AnalysisReport, Tuple[str, ...],
                                       Optional[_WindowMemo]]:
     """Single-window pipeline with stage-level reuse against ``memo``.
@@ -144,9 +151,13 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
     if memo is not None or keep_memo:
         # the collapse mode changes the external report (certified severity
         # bound vs exact severity), so it salts the external fingerprint —
-        # a memo taken under one mode can never be replayed under another
-        fp_cpu = fingerprint_arrays(measurements.cpu_time,
-                                    salt=f"collapse={collapse}")
+        # a memo taken under one mode can never be replayed under another;
+        # the diagnosis strategy name salts it for the same reason (a memo
+        # taken under one strategy must never seed reuse under another)
+        salt = f"collapse={collapse}"
+        if strategy_salt:
+            salt += f"\x00strategy={strategy_salt}"
+        fp_cpu = fingerprint_arrays(measurements.cpu_time, salt=salt)
         fp_internal = fingerprint_arrays(
             measurements.wall_time, measurements.program_wall,
             measurements.cycles, measurements.instructions)
@@ -260,7 +271,14 @@ class WindowEntry:
     ``cache_hits`` lists the analysis stages reused from the previous
     window's memo (values from :data:`CACHE_STAGES`); it is bookkeeping
     only — a reused stage holds the identical frozen objects recomputation
-    would produce, so policy evidence is unaffected."""
+    would produce, so policy evidence is unaffected.
+
+    ``features`` is the normalized :class:`~repro.core.diagnosis.
+    WindowFeatures` vector extracted from the raw matrices (the
+    threshold/learned strategies' input); ``diagnosis`` is the session
+    strategy's verdict.  Both are additive: ``SessionReport.render()``
+    does not consume them, so reports stay byte-identical to pre-strategy
+    sessions."""
 
     index: int
     label: Optional[str]
@@ -269,6 +287,8 @@ class WindowEntry:
     gap_ranks: Tuple[int, ...] = ()
     rank_cpu: Tuple[float, ...] = ()
     cache_hits: Tuple[str, ...] = ()
+    features: Optional[WindowFeatures] = None
+    diagnosis: Optional[Diagnosis] = None
 
     @property
     def clustering(self):
@@ -398,6 +418,7 @@ class PreparedWindow:
     gap_ranks: Tuple[int, ...]
     rank_cpu: Tuple[float, ...]
     memo: Optional[_WindowMemo]
+    features: Optional[WindowFeatures] = None
 
 
 class AnalysisSession:
@@ -419,21 +440,35 @@ class AnalysisSession:
     with severity ``S`` below the threshold; such windows carry an empty
     internal report and are marked ``internal_gated`` in ``cache_hits``.
     Enabling the gate changes reports (internal CCCRs are not computed for
-    healthy windows), so it is an explicit opt-in for high-rate pods."""
+    healthy windows), so it is an explicit opt-in for high-rate pods.
+
+    ``strategy`` is the attached :class:`~repro.core.diagnosis.
+    DiagnosisStrategy` (default :class:`~repro.core.diagnosis.
+    RoughSetStrategy` — the paper's path, observably identical to having
+    no strategy at all); each assembled entry carries its verdict on
+    ``WindowEntry.diagnosis``.  The strategy name is salted into the reuse
+    fingerprints, so memos never cross strategies."""
 
     def __init__(self, tree: RegionTree, keep_windows: Optional[int] = None,
                  *, reuse: bool = True,
                  internal_gate_s: Optional[float] = None,
-                 collapse: str = COLLAPSE_AUTO, column_workers: int = 1):
+                 collapse: str = COLLAPSE_AUTO, column_workers: int = 1,
+                 strategy: Optional[DiagnosisStrategy] = None):
         if collapse not in COLLAPSE_MODES:
             raise ValueError(f"collapse must be one of {COLLAPSE_MODES}, "
                              f"got {collapse!r}")
+        if strategy is None:
+            strategy = RoughSetStrategy()
+        if not callable(getattr(strategy, "diagnose", None)):
+            raise TypeError(f"strategy {strategy!r} does not implement "
+                            "diagnose(entry)")
         self.tree = tree
         self.keep_windows = keep_windows
         self.reuse = reuse
         self.internal_gate_s = internal_gate_s
         self.collapse = collapse
         self.column_workers = column_workers
+        self.strategy = strategy
         self._memo: Optional[_WindowMemo] = None
         self._entries: List[WindowEntry] = []
         self._next_index = 0
@@ -469,12 +504,18 @@ class AnalysisSession:
             memo=memo if self.reuse else None,
             internal_gate_s=self.internal_gate_s, keep_memo=self.reuse,
             roles=attr_roles, collapse=self.collapse,
-            column_workers=self.column_workers)
+            column_workers=self.column_workers,
+            strategy_salt=_strategy_salt(self.strategy))
         rank_cpu = tuple(float(x) for x in
                          as_matrix(measurements.cpu_time).sum(axis=1))
+        # extracted here, while the raw matrices are still in hand — the
+        # assembled entry carries only the frozen report
+        features = window_features(self.tree, measurements, attributes,
+                                   roles=attr_roles, gap_ranks=gap_ranks)
         return PreparedWindow(label=label, report=report, cache_hits=hits,
                               gap_ranks=tuple(int(r) for r in gap_ranks),
-                              rank_cpu=rank_cpu, memo=new_memo)
+                              rank_cpu=rank_cpu, memo=new_memo,
+                              features=features)
 
     def prepare_snapshot(self, snap, label: Optional[str] = None,
                          memo: Optional[_WindowMemo] = None
@@ -502,7 +543,10 @@ class AnalysisSession:
                             diff_reports(prev, prepared.report),
                             gap_ranks=prepared.gap_ranks,
                             rank_cpu=prepared.rank_cpu,
-                            cache_hits=prepared.cache_hits)
+                            cache_hits=prepared.cache_hits,
+                            features=prepared.features)
+        entry = dataclasses.replace(entry,
+                                    diagnosis=self.strategy.diagnose(entry))
         self._next_index += 1
         self._entries.append(entry)
         if self.keep_windows is not None and len(self._entries) > self.keep_windows:

@@ -101,6 +101,12 @@ def main(argv=None) -> int:
                          "(synthetic mid-run bottleneck); with --sim-ranks "
                          "> 1 it instead slows the last simulated rank")
     ap.add_argument("--inject-ms", type=float, default=30.0)
+    ap.add_argument("--diagnosis", default="rough",
+                    choices=("rough", "threshold", "learned"),
+                    help="diagnosis strategy for the window stream: the "
+                         "paper's rough-set path (default), calibrated "
+                         "per-role thresholds, or the small learned "
+                         "classifier trained on a generated corpus")
     ap.add_argument("--policies", default="",
                     help="comma list of window-adaptive policies to attach "
                          "(rebalance,reshard,quarantine or 'all'); empty = "
@@ -397,6 +403,8 @@ def main(argv=None) -> int:
             rate = toks / max(max(present), 1e-9)
             pod_rates[entry.index] = rate
             line += f" | pod rate {rate:,.0f} tok/s"
+        if entry.diagnosis is not None:
+            line += f" | diag {entry.diagnosis.kind}"
         print(line + f" | {verdict.render().splitlines()[0]}", flush=True)
         if engine is not None:
             for d in engine.log.for_window(entry.index):
@@ -458,15 +466,29 @@ def main(argv=None) -> int:
                 print(f"[policy] quarantine fired: rank {act.target} missing "
                       f"since window {act.evidence[0]}", flush=True)
 
+    # diagnosis strategy for the window stream.  rough (the default) is
+    # what AnalysisSession builds on its own — passing None keeps the
+    # reuse fingerprint identical to a strategy-less run.
+    strategy = None
+    if args.diagnosis == "threshold":
+        from repro.core import ThresholdStrategy
+        strategy = ThresholdStrategy()
+    elif args.diagnosis == "learned":
+        from repro.perfdbg.corpus import default_learned_strategy
+        strategy = default_learned_strategy()
+    if strategy is not None:
+        print(f"[train] diagnosis strategy: {strategy.name}", flush=True)
+
     collector = SnapshotCollector() if args.pod_gather else None
     if args.sync_analysis:
-        session, pipeline = AnalysisSession(tree), None
+        session = AnalysisSession(tree, strategy=strategy)
+        pipeline = None
     else:
         session = None
         pipeline = AsyncAnalysisSession(
             tree, max_queue=args.analysis_queue,
             backpressure=args.analysis_backpressure.replace("-", "_"),
-            workers=args.analysis_workers,
+            workers=args.analysis_workers, strategy=strategy,
             on_window=on_window, policy_engine=engine)
 
     def burn(ms: float) -> None:

@@ -1,0 +1,71 @@
+"""Regenerate (or verify) the checked-in diagnosis mini-corpus.
+
+The corpus under ``tests/data/corpus/`` is a deterministic function of
+(CORPUS_VERSION, seed, per_kind, n_ranks, schema) — see
+``repro.perfdbg.corpus``.  Regenerating with the defaults must reproduce
+the committed blobs byte-for-byte; CI runs ``--check`` to prove it.
+
+Usage:
+
+    PYTHONPATH=src python tests/data/make_corpus.py            # (re)write
+    PYTHONPATH=src python tests/data/make_corpus.py --check    # verify
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+DEFAULT_DIR = HERE / "corpus"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", type=pathlib.Path, default=DEFAULT_DIR,
+                    help=f"corpus directory (default {DEFAULT_DIR})")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--per-kind", type=int, default=8)
+    ap.add_argument("--ranks", type=int, default=8)
+    ap.add_argument("--schema", default="paper", choices=("paper", "tpu"))
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate in memory and diff against --dir "
+                         "instead of writing")
+    args = ap.parse_args()
+
+    from repro.perfdbg.corpus import generate_corpus, write_corpus
+
+    cases = generate_corpus(seed=args.seed, per_kind=args.per_kind,
+                            n_ranks=args.ranks, schema=args.schema)
+
+    if not args.check:
+        manifest = write_corpus(cases, args.dir)
+        print(f"wrote {len(cases)} cases to {args.dir} "
+              f"(manifest: {len(manifest['cases'])} blobs)")
+        return 0
+
+    # --check: every regenerated blob and label must match the files on disk
+    drift = []
+    for case in cases:
+        stem = args.dir / f"case_{case.index:03d}"
+        blob_path = stem.with_suffix(".pdws")
+        label_path = stem.with_suffix(".json")
+        if not blob_path.exists():
+            drift.append(f"{blob_path.name}: missing")
+            continue
+        if blob_path.read_bytes() != case.blob:
+            drift.append(f"{blob_path.name}: blob differs")
+        if json.loads(label_path.read_text()) != case.label:
+            drift.append(f"{label_path.name}: label differs")
+    on_disk = sorted(p.name for p in args.dir.glob("case_*.pdws"))
+    expected = sorted(f"case_{c.index:03d}.pdws" for c in cases)
+    for extra in set(on_disk) - set(expected):
+        drift.append(f"{extra}: not produced by the generator defaults")
+    for d in drift:
+        print(f"DRIFT {d}")
+    print(f"checked {len(cases)} cases against {args.dir}: "
+          f"{len(drift)} mismatches")
+    return 1 if drift else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,157 @@
+"""Fault-labeled diagnosis corpus: determinism, round-trip, gap alignment,
+and the checked-in mini-corpus staying in sync with its generator."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.diagnosis import DIAGNOSIS_KINDS, KIND_COMPUTE, KIND_NONE
+from repro.perfdbg.corpus import (CORPUS_REGIONS, corpus_tree, generate_case,
+                                  generate_corpus, load_corpus, split_corpus,
+                                  write_corpus)
+from repro.perfdbg.recorder import WindowSnapshot, merge_snapshots
+
+CORPUS_DIR = pathlib.Path(__file__).resolve().parent / "data" / "corpus"
+
+pytestmark = pytest.mark.corpus
+
+
+class TestDeterminism:
+    def test_same_seed_byte_identical(self):
+        """The injector regression gate: two independent generations with
+        the same seed must produce byte-identical blobs and equal labels."""
+        a = generate_corpus(seed=3, per_kind=2, n_ranks=4)
+        b = generate_corpus(seed=3, per_kind=2, n_ranks=4)
+        assert len(a) == len(b) == 2 * len(DIAGNOSIS_KINDS)
+        for ca, cb in zip(a, b):
+            assert ca.blob == cb.blob
+            assert ca.label == cb.label
+
+    def test_different_seed_differs(self):
+        a = generate_case(KIND_COMPUTE, 0, index=0, seed=1, n_ranks=4)
+        b = generate_case(KIND_COMPUTE, 0, index=0, seed=2, n_ranks=4)
+        assert a.blob != b.blob
+
+    def test_case_isolated_from_position(self):
+        """A case's bytes depend on (seed, kind, case_num) only — not on
+        which other cases were generated around it."""
+        solo = generate_case(KIND_COMPUTE, 1, index=0, seed=0, n_ranks=8)
+        full = generate_corpus(seed=0, per_kind=2, n_ranks=8)
+        compute = [c for c in full if c.kind == KIND_COMPUTE]
+        assert len(compute) == 2
+        # second compute case = case_num 1; bytes ignore corpus position
+        assert compute[1].blob == solo.blob
+
+
+class TestRoundTrip:
+    def test_blob_reparses_with_fingerprints(self):
+        """from_bytes validates the shipped schema/tree fingerprints; a
+        reparsed blob must carry the corpus shape and tree."""
+        for case in generate_corpus(seed=0, per_kind=1, n_ranks=4):
+            snap = WindowSnapshot.from_bytes(case.blob)
+            assert snap.tree.fingerprint() == corpus_tree().fingerprint()
+            meas = snap.measurements()
+            assert meas.cpu_time.shape == (case.label["n_ranks"],
+                                           len(CORPUS_REGIONS))
+            # and the local tree can be substituted when fingerprints match
+            again = WindowSnapshot.from_bytes(case.blob, tree=corpus_tree())
+            assert np.array_equal(again.measurements().cpu_time,
+                                  meas.cpu_time)
+
+    def test_labels_name_present_ranks_and_regions(self):
+        for case in generate_corpus(seed=0, per_kind=2, n_ranks=8):
+            label = case.label
+            assert label["kind"] in DIAGNOSIS_KINDS
+            for r in label["ranks"]:
+                assert 0 <= r < label["n_ranks"]
+                assert r not in label["gaps"]
+            if label["region_id"] is not None:
+                assert corpus_tree().name(label["region_id"]) \
+                    == label["region"]
+
+    def test_gap_labels_align_after_merge(self):
+        """Gap cases are built by merging declared-offset shards around a
+        missing host; the label's gap set must match the zero rows the
+        merged snapshot actually carries."""
+        gap_cases = [c for c in generate_corpus(seed=0, per_kind=4,
+                                                n_ranks=8)
+                     if c.label["gaps"]]
+        assert gap_cases, "gap_every should produce gap cases"
+        for case in gap_cases:
+            snap = case.snapshot()
+            assert snap.gap_mask is not None
+            masked = {int(r) for r in np.flatnonzero(snap.gap_mask)}
+            assert set(case.label["gaps"]) == masked
+            cpu = snap.measurements().cpu_time
+            zero_rows = {int(r) for r in range(cpu.shape[0])
+                         if not cpu[r].any()}
+            assert masked == zero_rows
+            # faulted ranks are never gap ranks
+            assert not set(case.label["ranks"]) & masked
+
+    def test_merge_matches_direct_recording(self):
+        """Re-merging a merged gap view is idempotent: same rank rows,
+        uncovered ranks stay zero-filled."""
+        case = next(c for c in generate_corpus(seed=0, per_kind=4,
+                                               n_ranks=8)
+                    if c.label["gaps"])
+        snap = case.snapshot()
+        remerged = merge_snapshots([snap], total_ranks=snap.n_ranks)
+        assert np.array_equal(remerged.measurements().cpu_time,
+                              snap.measurements().cpu_time)
+
+
+class TestCheckedInCorpus:
+    def test_matches_generator_defaults(self):
+        """The committed mini-corpus must be exactly what
+        tests/data/make_corpus.py writes with default flags."""
+        if not CORPUS_DIR.exists():
+            pytest.skip("mini-corpus not generated")
+        cases = generate_corpus(seed=0, per_kind=8, n_ranks=8)
+        on_disk = load_corpus(CORPUS_DIR)
+        assert len(on_disk) == len(cases)
+        for disk, fresh in zip(on_disk, cases):
+            assert disk.blob == fresh.blob
+            assert disk.label == fresh.label
+
+    def test_manifest_digests_gate_loading(self, tmp_path):
+        cases = generate_corpus(seed=0, per_kind=1, n_ranks=4)
+        write_corpus(cases, tmp_path)
+        loaded = load_corpus(tmp_path)
+        assert [c.label for c in loaded] == [c.label for c in cases]
+        # corrupt one blob: the digest check must reject the corpus
+        victim = sorted(tmp_path.glob("case_*.pdws"))[0]
+        raw = victim.read_bytes()
+        victim.write_bytes(raw[:-1] + bytes([raw[-1] ^ 0xFF]))
+        with pytest.raises(ValueError, match="digest"):
+            load_corpus(tmp_path)
+
+    def test_split_is_disjoint_and_kind_balanced(self):
+        cases = generate_corpus(seed=0, per_kind=4, n_ranks=4)
+        calib, evaln = split_corpus(cases)
+        assert len(calib) + len(evaln) == len(cases)
+        assert not {c.index for c in calib} & {c.index for c in evaln}
+        for kinds in ([c.kind for c in calib], [c.kind for c in evaln]):
+            assert set(kinds) == set(DIAGNOSIS_KINDS)
+
+
+class TestBenchmarkSmoke:
+    def test_benchmark_runs_and_gates(self, tmp_path):
+        import benchmarks.diagnosis_corpus as bench
+        cases = generate_corpus(seed=0, per_kind=2, n_ranks=4, gap_every=0)
+        corpus_dir = tmp_path / "corpus"
+        write_corpus(cases, corpus_dir)
+        results = bench.run_benchmark(corpus_dir)
+        assert results["_meta"]["schema"] == bench.SCHEMA
+        for strat in ("rough", "threshold", "learned"):
+            assert 0.0 <= results[f"{strat}_accuracy"] <= 1.0
+        baseline = tmp_path / "baseline.json"
+        # missing baseline tolerated; then a self-check passes
+        assert bench.check_baseline(results, baseline) == 0
+        baseline.write_text(json.dumps(results))
+        assert bench.check_baseline(results, baseline) == 0
+        # a drop below baseline minus tolerance fails
+        worse = dict(results)
+        worse["rough_accuracy"] = results["rough_accuracy"] - 0.5
+        assert bench.check_baseline(worse, baseline) == 1

@@ -121,3 +121,50 @@ def test_property_core_is_minimal_under_singletons(n_rows, n_attrs, seed):
     res = extract_core(t)
     sizes = {len(c) for c in res.cores}
     assert len(sizes) <= 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 7), st.integers(2, 5), st.integers(0, 10_000))
+def test_property_core_minimality_soundness(n_rows, n_attrs, seed):
+    """Property: every reported core is irreducible — dropping ANY single
+    attribute from it leaves some discernibility clause uncovered (a pair of
+    different-decision rows that only the dropped attribute distinguishes is
+    no longer distinguished)."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 3, size=(n_rows, n_attrs))
+    dec = rng.integers(0, 2, size=n_rows)
+    names = tuple(f"a{i}" for i in range(n_attrs))
+    t = DecisionTable.build(names, [tuple(r) for r in rows], list(dec))
+    mat = discernibility_matrix(t)
+    clauses = [mat[i][j] for i in range(n_rows) for j in range(i + 1, n_rows)
+               if isinstance(mat[i][j], frozenset)]
+    for core in extract_core(t).cores:
+        assert all(clause & set(core) for clause in clauses), \
+            f"core {core} does not cover every clause"
+        for drop in core:
+            reduced = set(core) - {drop}
+            assert any(not (clause & reduced) for clause in clauses), \
+                f"core {core} minus {drop!r} still covers all clauses: " \
+                "reported core is not minimal"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(0, 10_000))
+def test_property_core_permutation_invariance(n_rows, n_attrs, seed):
+    """Property: the extracted core SET is invariant under attribute-column
+    permutation — reordering the table's columns permutes names inside each
+    core but cannot change which attribute sets are minimal."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 3, size=(n_rows, n_attrs))
+    dec = rng.integers(0, 2, size=n_rows)
+    names = tuple(f"a{i}" for i in range(n_attrs))
+    t = DecisionTable.build(names, [tuple(r) for r in rows], list(dec))
+    base = {frozenset(c) for c in extract_core(t).cores}
+
+    perm = rng.permutation(n_attrs)
+    pnames = tuple(names[p] for p in perm)
+    prows = [tuple(r[perm]) for r in rows]
+    tp = DecisionTable.build(pnames, prows, list(dec))
+    permuted = {frozenset(c) for c in extract_core(tp).cores}
+    assert permuted == base, \
+        f"cores changed under column permutation: {base} vs {permuted}"
