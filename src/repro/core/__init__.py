@@ -34,6 +34,7 @@ from .roughset import (ATTRIBUTE_ROLES, CoreResult, DecisionTable,
                        discernibility_matrix, extract_core,
                        external_decision_table, internal_decision_table,
                        root_causes)
+from .journal import JournalError, WindowJournal
 from .pipeline import (AsyncAnalysisSession, BACKPRESSURE_POLICIES,
                        PipelineClosed)
 from .policy import (Action, BUILTIN_POLICIES, CollectorQuarantinePolicy,
@@ -55,7 +56,8 @@ __all__ = [
     "Policy", "PolicyEngine", "PolicyLog", "RebalancePolicy", "ReshardPolicy",
     "make_policies",
     "AnalysisReport", "AnalysisSession", "AsyncAnalysisSession",
-    "BACKPRESSURE_POLICIES", "PipelineClosed", "AutoAnalyzer", "Measurements",
+    "BACKPRESSURE_POLICIES", "PipelineClosed", "JournalError",
+    "WindowJournal", "AutoAnalyzer", "Measurements",
     "PAPER_ATTRIBUTES", "RootCauseReport", "SessionReport", "WindowDiff",
     "WindowEntry", "analyze", "analyze_window", "diff_reports",
     "external_root_causes", "fingerprint_arrays", "internal_root_causes",

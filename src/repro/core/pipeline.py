@@ -23,6 +23,21 @@ Contract:
 * A crash in a worker (analysis, the policy engine, or the ``on_window``
   callback) is captured and re-raised — with the original exception as the
   cause — from the next ``submit``/``drain``/``close``.
+* ``supervised=True`` *contains* analysis failures instead: the window is
+  tombstoned into the timeline as a ``failed`` entry (exception text as
+  evidence, see ``AnalysisSession.ingest_failure``), the worker is
+  restarted, and the run continues.  Only ``escalate_after`` *consecutive*
+  failures escalate to the re-raise path above — a systematically broken
+  analyzer still crashes, a window-local poison pill does not.  On clean
+  input a supervised session's report is byte-identical to an
+  unsupervised one's.  Callback (policy/``on_window``) crashes still
+  escalate immediately: those are driver bugs, not data faults.
+* ``journal`` (a ``core.journal.WindowJournal``) records every submitted
+  window's blob before it enters the queue; after a process crash,
+  ``core.journal.replay`` rebuilds the byte-identical timeline.  Journal
+  write failures never stall submission — they are counted on
+  ``journal_errors`` and the run continues (the journal is a durability
+  aid, not a dependency).
 * A ``policy_engine`` (``core.policy.PolicyEngine``) attached at
   construction runs during in-order assembly after each window is analyzed
   — *before* ``on_window``, so the callback can print this window's
@@ -69,12 +84,14 @@ class PipelineClosed(RuntimeError):
 
 
 class _PrepareFailure:
-    """A worker's analysis stage raised; assembled in order as a failure."""
+    """A worker's analysis stage raised; assembled in order as a failure
+    (supervised sessions tombstone it under the window's label)."""
 
-    __slots__ = ("error",)
+    __slots__ = ("error", "label")
 
-    def __init__(self, error: BaseException):
+    def __init__(self, error: BaseException, label=None):
         self.error = error
+        self.label = label
 
 
 class AsyncAnalysisSession:
@@ -99,7 +116,10 @@ class AsyncAnalysisSession:
                  policy_engine=None, reuse: bool = True,
                  internal_gate_s: Optional[float] = None,
                  workers: int = 1, collapse: Optional[str] = None,
-                 column_workers: Optional[int] = None, strategy=None):
+                 column_workers: Optional[int] = None, strategy=None,
+                 supervised: bool = False, escalate_after: int = 3,
+                 journal=None,
+                 on_failure: Optional[Callable[[WindowEntry], None]] = None):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(f"backpressure must be one of "
                              f"{BACKPRESSURE_POLICIES}, got {backpressure!r}")
@@ -107,6 +127,8 @@ class AsyncAnalysisSession:
             raise ValueError("max_queue must be >= 1")
         if workers < 1:
             raise ValueError("workers must be >= 1")
+        if escalate_after < 1:
+            raise ValueError("escalate_after must be >= 1")
         if session is not None and (keep_windows is not None
                                     or not reuse
                                     or internal_gate_s is not None
@@ -136,6 +158,13 @@ class AsyncAnalysisSession:
         self._on_window = on_window
         self._engine = policy_engine
         self._workers_n = workers
+        self._supervised = supervised
+        self._escalate_after = escalate_after
+        self._on_failure = on_failure
+        self._journal = journal
+        self._journal_errors = 0
+        self._streak = 0          # consecutive contained failures (by _cv)
+        self._restarts = 0        # supervised single-worker replacements
         self._actions: List = []   # fired, not yet taken (guarded by _cv)
         self._q: collections.deque = collections.deque()
         self._cv = threading.Condition()
@@ -159,7 +188,7 @@ class AsyncAnalysisSession:
         for t in self._threads:
             t.start()
 
-    # -- single-worker path (the pre-pool loop, kept verbatim) ---------------
+    # -- single-worker path (the pre-pool loop, plus supervision) ------------
     def _run_single(self) -> None:
         while True:
             with self._cv:
@@ -181,16 +210,58 @@ class AsyncAnalysisSession:
                     self._on_window(entry)
             except BaseException as e:   # propagate to the producer side
                 err = e
+            contained = (err is not None and not ingested and self._supervised)
+            if contained:
+                self._tombstone(label or getattr(snap, "label", None), err)
+            restart = False
             with self._cv:
                 if fired:
                     self._actions.extend(fired)
                 if err is not None:
                     if not ingested:   # a callback crash still ingested
                         self._failed += 1
-                    if self._error is None:
+                    if contained:
+                        self._streak += 1
+                        if self._streak >= self._escalate_after:
+                            if self._error is None:
+                                self._error = err
+                        else:
+                            restart = True
+                    elif self._error is None:
                         self._error = err
+                elif ingested:
+                    self._streak = 0
                 self._done += 1
                 self._cv.notify_all()
+            if restart:
+                # the contained exception may have left thread-local state
+                # (profilers, numpy errstate) dirty: hand the loop to a
+                # fresh worker thread and retire this one
+                with self._cv:
+                    self._restarts += 1
+                    t = threading.Thread(
+                        target=self._run_single,
+                        name=f"perfdbg-analysis-r{self._restarts}",
+                        daemon=True)
+                    self._threads.append(t)
+                t.start()
+                return
+
+    def _tombstone(self, label, err: BaseException) -> None:
+        """Record one contained failure in the timeline (supervised mode).
+        Runs on the thread that owns the session at that moment (the
+        single worker, or the in-order assembler)."""
+        entry = None
+        try:
+            entry = self._session.ingest_failure(
+                label=label, error=f"{type(err).__name__}: {err}")
+        except BaseException:
+            pass                        # containment must not cascade
+        if entry is not None and self._on_failure is not None:
+            try:
+                self._on_failure(entry)
+            except BaseException:
+                pass
 
     # -- pooled path ---------------------------------------------------------
     def _run_pooled(self) -> None:
@@ -218,7 +289,8 @@ class AsyncAnalysisSession:
                 outcome: object = self._session.prepare_snapshot(
                     snap, label=label, memo=memo)
             except BaseException as e:
-                outcome = _PrepareFailure(e)
+                outcome = _PrepareFailure(
+                    e, label=label or getattr(snap, "label", None))
             with self._cv:
                 self._results[seq] = outcome
                 self._inflight -= 1
@@ -257,7 +329,9 @@ class AsyncAnalysisSession:
         entry = None
         if isinstance(outcome, _PrepareFailure):
             err, failed = outcome.error, True
+            label = outcome.label
         else:
+            label = outcome.label
             try:
                 entry = self._session.ingest_prepared(outcome)
             except BaseException as e:
@@ -270,15 +344,24 @@ class AsyncAnalysisSession:
                         self._on_window(entry)
                 except BaseException as e:   # ingested: analyzed, but surface
                     err = e
+        contained = failed and self._supervised
+        if contained:
+            self._tombstone(label, err)
         with self._cv:
             if fired:
                 self._actions.extend(fired)
             if err is not None:
                 if failed:
                     self._failed += 1
-                if self._error is None:
+                if contained:
+                    self._streak += 1
+                    if (self._streak >= self._escalate_after
+                            and self._error is None):
+                        self._error = err
+                elif self._error is None:
                     self._error = err
             if entry is not None:
+                self._streak = 0
                 self._latest_memo = self._session.latest_memo
             self._done += 1
             self._cv.notify_all()
@@ -290,11 +373,19 @@ class AsyncAnalysisSession:
     # -- producer side -------------------------------------------------------
     def submit(self, snap, label: Optional[str] = None) -> None:
         """Enqueue one frozen window (a ``WindowSnapshot``); the only cost
-        on the caller is the queue append (or a wait under ``block``)."""
+        on the caller is the queue append (or a wait under ``block``) —
+        plus, with a ``journal`` attached, one local append of the
+        serialized blob (write failures counted, never raised)."""
         with self._cv:
             self._raise_pending()
             if self._closed:
                 raise PipelineClosed("submit() on a closed pipeline")
+            if self._journal is not None:
+                try:
+                    self._journal.append(self._submitted, snap.to_bytes(),
+                                         label=label or snap.label)
+                except Exception:
+                    self._journal_errors += 1
             if self._policy == BLOCK:
                 while len(self._q) >= self._max_queue and not self._closed:
                     self._cv.wait()
@@ -341,6 +432,8 @@ class AsyncAnalysisSession:
         report = self.drain(timeout)
         for t in self._threads:
             t.join(timeout)
+        if self._journal is not None:
+            self._journal.close()
         return report
 
     def __enter__(self) -> "AsyncAnalysisSession":
@@ -406,3 +499,22 @@ class AsyncAnalysisSession:
         """Windows actually ingested (excludes drops and failed ingests)."""
         with self._cv:
             return self._done - self._dropped - self._failed
+
+    @property
+    def failed(self) -> int:
+        """Windows whose analysis raised (tombstoned under supervision).
+        Invariant after ``drain``: analyzed + failed + dropped == submitted."""
+        with self._cv:
+            return self._failed
+
+    @property
+    def worker_restarts(self) -> int:
+        """Single-worker threads replaced after a contained failure."""
+        with self._cv:
+            return self._restarts
+
+    @property
+    def journal_errors(self) -> int:
+        """Journal appends that failed and were swallowed (counted only)."""
+        with self._cv:
+            return self._journal_errors

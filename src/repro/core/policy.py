@@ -276,22 +276,45 @@ class ReshardPolicy(Policy):
 
 
 class CollectorQuarantinePolicy(Policy):
-    """Flag chronically missing hosts (the collector-resilience half).
+    """Flag chronically missing *or chronically corrupt* hosts (the
+    collector-resilience half).
 
     ``SnapshotCollector`` ships ``None`` for hosts that time out; the merge
     zero-fills their ranks under ``gap_mask``, which ``ingest_snapshot``
     surfaces as ``entry.gap_ranks``.  One proposal per missing rank: a rank
     absent ``k`` windows in a row is a dead or wedged host, and the fired
     ``quarantine`` action tells the serving layer to stop routing to it and
-    page for a replacement."""
+    page for a replacement.
+
+    ``health`` (a ``launch.collect.TransportHealth``) adds the corruption
+    channel: a host whose *cumulative* corrupt + skew count reaches
+    ``corrupt_windows`` is proposed as ``"host:<h>"`` every window from
+    then on.  Gap streaks alone miss this host — one that alternates good
+    and corrupt windows resets its per-rank gap streak every other window,
+    but its health counters only ever grow, so the proposal repeats, the
+    engine's debounce streak builds, and the quarantine fires."""
 
     name = "quarantine"
 
+    def __init__(self, health=None, corrupt_windows: int = 3):
+        self.health = health
+        self.corrupt_windows = int(corrupt_windows)
+
     def observe(self, entry: WindowEntry,
                 session: AnalysisSession) -> List[Action]:
-        return [Action(kind="quarantine", target=int(r),
-                       params={"rank": int(r)})
-                for r in entry.gap_ranks]
+        out = [Action(kind="quarantine", target=int(r),
+                      params={"rank": int(r)})
+               for r in entry.gap_ranks]
+        if self.health is not None:
+            for h in self.health.hosts():
+                bad = self.health.bad(h)
+                if bad >= self.corrupt_windows:
+                    out.append(Action(
+                        kind="quarantine", target=f"host:{int(h)}",
+                        params={"host": int(h), "bad_windows": int(bad),
+                                "corrupt": int(self.health.corrupt[h]),
+                                "skew": int(self.health.skew[h])}))
+        return out
 
 
 BUILTIN_POLICIES = {

@@ -278,17 +278,26 @@ class WindowEntry:
     threshold/learned strategies' input); ``diagnosis`` is the session
     strategy's verdict.  Both are additive: ``SessionReport.render()``
     does not consume them, so reports stay byte-identical to pre-strategy
-    sessions."""
+    sessions.
+
+    A **tombstone** (``failed=True``) marks a window whose analysis raised
+    under supervision: ``report`` is ``None``, ``error`` records the
+    exception as evidence, and the entry holds the window's place in the
+    timeline (indices keep counting) without feeding policies or diffs.
+    The verdict accessors must not be called on a tombstone — policy
+    engines and straggler timelines skip ``failed`` entries."""
 
     index: int
     label: Optional[str]
-    report: AnalysisReport
+    report: Optional[AnalysisReport]
     diff: WindowDiff
     gap_ranks: Tuple[int, ...] = ()
     rank_cpu: Tuple[float, ...] = ()
     cache_hits: Tuple[str, ...] = ()
     features: Optional[WindowFeatures] = None
     diagnosis: Optional[Diagnosis] = None
+    failed: bool = False
+    error: Optional[str] = None
 
     @property
     def clustering(self):
@@ -354,12 +363,19 @@ class SessionReport:
     windows: Tuple[WindowEntry, ...]
 
     def bottleneck_timeline(self) -> Dict[int, Tuple[int, ...]]:
-        """region id -> indices of windows where it was an internal CCCR."""
+        """region id -> indices of windows where it was an internal CCCR.
+        Failed (tombstoned) windows carry no report and are skipped."""
         out: Dict[int, List[int]] = {}
         for w in self.windows:
+            if w.failed:
+                continue
             for rid in w.report.internal.cccrs:
                 out.setdefault(rid, []).append(w.index)
         return {rid: tuple(ws) for rid, ws in out.items()}
+
+    def failed_count(self) -> int:
+        """Windows tombstoned by supervised failure containment."""
+        return sum(1 for w in self.windows if w.failed)
 
     def first_window(self, rid: int) -> Optional[int]:
         """First window in which ``rid`` was flagged as an internal CCCR."""
@@ -380,6 +396,9 @@ class SessionReport:
         nm = (lambda r: tree.name(r)) if tree is not None else (lambda r: f"region {r}")
         lines = [f"=== analysis session: {len(self.windows)} window(s) ==="]
         for w in self.windows:
+            if w.failed:
+                lines.append(f"[{w.title()}] FAILED: {w.error or 'analysis error'}")
+                continue
             ints = ", ".join(nm(r) for r in w.report.internal.cccrs) or "(none)"
             exts = ", ".join(nm(r) for r in w.report.external.cccrs)
             line = (f"[{w.title()}] S={w.report.external.severity:.4f} "
@@ -472,6 +491,10 @@ class AnalysisSession:
         self._memo: Optional[_WindowMemo] = None
         self._entries: List[WindowEntry] = []
         self._next_index = 0
+        # last successfully analyzed report: diffs skip over tombstones, so
+        # on clean input this is always the previous entry's report and
+        # behavior is unchanged
+        self._last_report: Optional[AnalysisReport] = None
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -538,7 +561,7 @@ class AnalysisSession:
         the in-order assembly step the async pool serializes."""
         if self.reuse:
             self._memo = prepared.memo
-        prev = self._entries[-1].report if self._entries else None
+        prev = self._last_report
         entry = WindowEntry(self._next_index, prepared.label, prepared.report,
                             diff_reports(prev, prepared.report),
                             gap_ranks=prepared.gap_ranks,
@@ -547,6 +570,23 @@ class AnalysisSession:
                             features=prepared.features)
         entry = dataclasses.replace(entry,
                                     diagnosis=self.strategy.diagnose(entry))
+        self._last_report = prepared.report
+        return self._append(entry)
+
+    def ingest_failure(self, label: Optional[str] = None,
+                       error: Optional[str] = None) -> WindowEntry:
+        """Tombstone one window whose analysis raised: the entry takes its
+        place in the timeline (``failed=True``, exception text on
+        ``error``) but carries no report, feeds no diff (the next good
+        window diffs against the last good one), and gets no diagnosis.
+        This is the supervised pipeline's containment primitive."""
+        empty = WindowDiff(appeared=(), disappeared=(), persisted=(),
+                           external_appeared=(), external_disappeared=(),
+                           severity_delta=0.0, migrated=())
+        return self._append(WindowEntry(self._next_index, label, None, empty,
+                                        failed=True, error=error))
+
+    def _append(self, entry: WindowEntry) -> WindowEntry:
         self._next_index += 1
         self._entries.append(entry)
         if self.keep_windows is not None and len(self._entries) > self.keep_windows:

@@ -137,6 +137,26 @@ def main(argv=None) -> int:
                          "weight is this factor of uniform (the injected "
                          "fault the reshard demo repairs); ignored on "
                          "--resume when a checkpointed partition exists")
+    ap.add_argument("--supervised", action="store_true",
+                    help="contain analysis failures: a window whose "
+                         "analysis raises is tombstoned as a FAILED entry "
+                         "and the run continues (implied by --chaos-seed)")
+    ap.add_argument("--escalate-after", type=int, default=3,
+                    help="under --supervised: consecutive failed windows "
+                         "before the crash is considered real and re-raised")
+    ap.add_argument("--journal", default="", metavar="FILE",
+                    help="append every submitted window blob to this "
+                         "crash-safe journal (core.journal.replay rebuilds "
+                         "the byte-identical report after a crash)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="chaos demo: shard each window into per-host "
+                         "blobs, inject seeded transport faults plus a "
+                         "forced analyzer exception, merge leniently "
+                         "(quarantining corrupt hosts), and analyze under "
+                         "supervision — the CI chaos-soak's driver mode")
+    ap.add_argument("--chaos-hosts", type=int, default=2,
+                    help="hosts to shard each window across under "
+                         "--chaos-seed (must be <= the pod rank count)")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args(argv)
     if args.data_hosts > 1 and args.sim_ranks > 1:
@@ -153,8 +173,12 @@ def main(argv=None) -> int:
     from repro.core import (AnalysisSession, AsyncAnalysisSession,
                             PolicyEngine, RegionTree, make_policies)
     from repro.core.roughset import ROLE_IO
+    from repro.core.journal import WindowJournal
+    from repro.core.policy import CollectorQuarantinePolicy
     from repro.data.pipeline import Partition, SyntheticTokens
-    from repro.launch.collect import SnapshotCollector
+    from repro.launch.collect import (SnapshotCollector, TransportHealth,
+                                      merge_blobs)
+    from repro.perfdbg import chaos as chaos_mod
     from repro.launch.mesh import make_host_mesh
     from repro.launch import steps as steps_lib
     from repro.models.model import input_specs
@@ -463,8 +487,17 @@ def main(argv=None) -> int:
                           f"core names {act.target!r}): repartition the "
                           f"data pipeline", flush=True)
             elif act.kind == "quarantine":
-                print(f"[policy] quarantine fired: rank {act.target} missing "
-                      f"since window {act.evidence[0]}", flush=True)
+                if act.params.get("host") is not None:
+                    print(f"[policy] quarantine fired: host "
+                          f"{act.params['host']} shipped "
+                          f"{act.params.get('bad_windows', 0)} bad window(s) "
+                          f"(corrupt {act.params.get('corrupt', 0)}, skew "
+                          f"{act.params.get('skew', 0)}) — stop routing to "
+                          f"it", flush=True)
+                else:
+                    print(f"[policy] quarantine fired: rank {act.target} "
+                          f"missing since window {act.evidence[0]}",
+                          flush=True)
 
     # diagnosis strategy for the window stream.  rough (the default) is
     # what AnalysisSession builds on its own — passing None keeps the
@@ -479,22 +512,65 @@ def main(argv=None) -> int:
     if strategy is not None:
         print(f"[train] diagnosis strategy: {strategy.name}", flush=True)
 
-    collector = SnapshotCollector() if args.pod_gather else None
+    # fault containment surfaces: the chaos injector (seeded transport +
+    # analyzer faults, forced analyzer fault at window 1 and a truncated
+    # host-1 blob at window 2 so the demo's audit lines are deterministic),
+    # the transport health record quarantine policies consume, the
+    # crash-safe journal, and supervised analysis.
+    chaos = None
+    health = None
+    if args.chaos_seed is not None:
+        if args.chaos_hosts < 1 or args.chaos_hosts > R:
+            ap.error(f"--chaos-hosts must be in [1, {R}] "
+                     f"(the pod has {R} ranks)")
+        chaos = chaos_mod.ChaosInjector(
+            args.chaos_seed, rates=chaos_mod.DEFAULT_RATES,
+            force={"analyzer": [(1, 0)],
+                   "truncate": [(2, min(1, args.chaos_hosts - 1))]})
+        print(f"[chaos] injector armed: seed {args.chaos_seed}, "
+              f"{args.chaos_hosts} host shard(s) per window", flush=True)
+    supervised = args.supervised or chaos is not None
+    if chaos is not None or args.pod_gather:
+        health = TransportHealth()
+    if engine is not None and health is not None:
+        for p in engine.policies:
+            if isinstance(p, CollectorQuarantinePolicy):
+                p.health = health
+                if chaos is not None:
+                    # short demo runs: one bad window is already suspicious
+                    p.corrupt_windows = 1
+    journal = WindowJournal(args.journal) if args.journal else None
+
+    def on_failure(entry):
+        print(f"[analysis] window {entry.title()} FAILED: {entry.error}",
+              flush=True)
+
+    collector = None
+    if args.pod_gather:
+        collector = SnapshotCollector(strict=False, health=health)
+    if chaos is not None:
+        base_session = chaos_mod.ChaosSession(tree, chaos, strategy=strategy)
+    else:
+        base_session = AnalysisSession(tree, strategy=strategy)
     if args.sync_analysis:
-        session = AnalysisSession(tree, strategy=strategy)
+        session = base_session
         pipeline = None
     else:
         session = None
         pipeline = AsyncAnalysisSession(
             tree, max_queue=args.analysis_queue,
             backpressure=args.analysis_backpressure.replace("-", "_"),
-            workers=args.analysis_workers, strategy=strategy,
+            workers=args.analysis_workers, session=base_session,
+            supervised=supervised, escalate_after=args.escalate_after,
+            journal=journal, on_failure=on_failure,
             on_window=on_window, policy_engine=engine)
 
     def burn(ms: float) -> None:
         t_end = time.perf_counter() + ms / 1e3
         while time.perf_counter() < t_end:
             np.dot(np.ones(256), np.ones(256))
+
+    sync_seq = [0]   # journal sequence for the sync-analysis path
 
     def flush_window(last_step: int, win_start: int):
         assert rec.within_paper_budget()
@@ -503,12 +579,51 @@ def main(argv=None) -> int:
         # keyed by label, not index: under drop_oldest the session's entry
         # indices fall behind the recorder's snapshot indices
         win_tokens[label] = (last_step - win_start + 1) * tokens_per_step
-        if collector is not None:
-            snap = collector.gather(snap)
+        try:
+            if chaos is not None:
+                # shard the pod snapshot into per-host blobs as a real
+                # collector would, run each through the fault injector,
+                # and merge leniently — damaged hosts quarantine into the
+                # gap mask instead of crashing the step loop
+                blobs = chaos_mod.shard_blobs(snap, args.chaos_hosts)
+                mangled = [chaos.mangle_blob(b, snap.index, h)
+                           for h, b in enumerate(blobs)]
+                snap = merge_blobs(mangled, tree=tree,
+                                   total_ranks=snap.n_ranks,
+                                   strict=False, health=health)
+                for h in sorted(health.last_statuses):
+                    status = health.last_statuses[h]
+                    if status != "ok":
+                        print(f"[transport] window w{snap.index} host {h}: "
+                              f"{status}", flush=True)
+            elif collector is not None:
+                snap = collector.gather(snap)
+        except ValueError:
+            # every shard was lost or quarantined: there is no window to
+            # analyze, but the run must keep training
+            win_tokens.pop(label, None)
+            print(f"[analysis] window w{snap.index} dropped: "
+                  f"no contributors", flush=True)
+            return
         if pipeline is not None:           # off-critical-path: enqueue only
             pipeline.submit(snap, label=label)
         else:
-            entry = session.ingest_snapshot(snap, label=label)
+            if journal is not None:
+                try:
+                    journal.append(sync_seq[0], snap.to_bytes(), label=label)
+                except Exception as e:
+                    print(f"[journal] append failed (contained): {e}",
+                          flush=True)
+                sync_seq[0] += 1
+            try:
+                entry = session.ingest_snapshot(snap, label=label)
+            except Exception as e:
+                if not supervised:
+                    raise
+                entry = session.ingest_failure(
+                    label=label, error=f"{type(e).__name__}: {e}")
+                on_failure(entry)
+                return
             fired = engine.observe(entry, session) if engine else []
             on_window(entry)
             apply_actions(fired)
@@ -564,11 +679,26 @@ def main(argv=None) -> int:
 
     data.stop_prefetch()
     report = session.report() if pipeline is None else pipeline.close()
+    if journal is not None and pipeline is None:
+        journal.close()
     if pipeline is not None:
         apply_actions(pipeline.take_actions())   # anything fired post-loop
         if pipeline.dropped:
             print(f"[train] analysis dropped {pipeline.dropped} window(s) "
                   f"under backpressure", flush=True)
+        if supervised and (pipeline.failed or pipeline.worker_restarts):
+            print(f"[train] supervised analysis contained "
+                  f"{pipeline.failed} failed window(s) "
+                  f"({pipeline.worker_restarts} worker restart(s))",
+                  flush=True)
+        if pipeline.journal_errors:
+            print(f"[journal] {pipeline.journal_errors} append(s) failed "
+                  f"(contained)", flush=True)
+    if health is not None and health.windows:
+        print(health.render(), flush=True)
+    if journal is not None:
+        print(f"[journal] {journal.appended} window(s) journaled to "
+              f"{journal.path}", flush=True)
     print(report.render(tree), flush=True)
     wins = rec.windows()
     if wins:

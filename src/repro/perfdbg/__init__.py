@@ -6,7 +6,8 @@ from .costs import (AnalyticCosts, CostProvider, HloCosts, ModuleCoverage,
 from .instrument import Instrumenter, build_step_tree
 from .recorder import (ATTR_FIELDS, LOCATE_FIELDS, PAPER_BYTES_PER_CELL,
                        RECORD_DTYPE, RegionRecorder, WindowSnapshot,
-                       WIRE_VERSION, WireFormatError, merge_snapshots)
+                       WIRE_VERSION, WireFormatError, WireSkewError,
+                       merge_snapshots)
 from .schema import (AttributeField, AttributeSchema, PAPER_SCHEMA,
                      TPU_SCHEMA, get_schema, list_schemas, register_schema)
 from .straggler import (StragglerVerdict, detect, detect_timeline,

@@ -27,6 +27,7 @@ import collections
 import dataclasses
 import json
 import struct
+import zlib
 from typing import Deque, Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -52,9 +53,26 @@ WIRE_MAGIC = b"PDWS"
 WIRE_VERSION = 1
 _WIRE_PREFIX = struct.Struct("<4sHI")
 
+# Optional integrity trailer: ``to_bytes(checksum=True)`` appends
+# ``<4s magic "PDWC"> <u4 crc32-of-preceding-bytes>``.  ``from_bytes``
+# detects, verifies, and strips it; blobs without the trailer (every blob
+# ever produced before the trailer existed, and the checked-in golden
+# corpus) parse unchanged, so the default wire output is byte-identical.
+CHECKSUM_MAGIC = b"PDWC"
+_CHECKSUM_TRAILER = struct.Struct("<4sI")
+
 
 class WireFormatError(ValueError):
     """Malformed, incompatible, or wrong-version snapshot bytes."""
+
+
+class WireSkewError(WireFormatError):
+    """A *well-formed* snapshot from an incompatible peer: unknown wire
+    version, or a schema / region-tree fingerprint that does not match the
+    local one.  Distinguished from plain :class:`WireFormatError` (bit-level
+    corruption) so a lenient merge can count skewed and corrupt hosts
+    separately — a version-skewed host needs a rollout fix, a corrupt one a
+    transport fix."""
 
 
 def _measurements(data: np.ndarray, program_wall: np.ndarray) -> Measurements:
@@ -118,10 +136,15 @@ class WindowSnapshot:
         return self.data.nbytes
 
     # -- wire format --------------------------------------------------------
-    def to_bytes(self, rank_offset: Optional[int] = None) -> bytes:
+    def to_bytes(self, rank_offset: Optional[int] = None, *,
+                 checksum: bool = False) -> bytes:
         """Serialize for transport: versioned header (schema name + field
         spec, window index/label, rank offset, region-tree fingerprint and
-        spec, gap list) followed by the packed payload."""
+        spec, gap list) followed by the packed payload.
+
+        ``checksum=True`` appends the 8-byte ``PDWC`` crc32 trailer so the
+        receiver can reject bit-level corruption; the default stays
+        trailer-free so existing serialized blobs remain byte-identical."""
         off = self.rank_offset if rank_offset is None else int(rank_offset)
         header = {
             "schema": self.schema.name,
@@ -140,11 +163,15 @@ class WindowSnapshot:
             # receiver must get an all-False mask back, not None
             header["gaps"] = np.flatnonzero(self.gap_mask).tolist()
         hdr = json.dumps(header, separators=(",", ":")).encode()
-        return b"".join([
+        frame = b"".join([
             _WIRE_PREFIX.pack(WIRE_MAGIC, WIRE_VERSION, len(hdr)), hdr,
             np.ascontiguousarray(self.program_wall, dtype="<f8").tobytes(),
             np.ascontiguousarray(self.data).tobytes(),
         ])
+        if checksum:
+            frame += _CHECKSUM_TRAILER.pack(CHECKSUM_MAGIC,
+                                            zlib.crc32(frame) & 0xFFFFFFFF)
+        return frame
 
     @classmethod
     def from_bytes(cls, blob: bytes, tree: Optional[RegionTree] = None
@@ -159,9 +186,16 @@ class WindowSnapshot:
         if magic != WIRE_MAGIC:
             raise WireFormatError(f"bad magic {magic!r}")
         if version != WIRE_VERSION:
-            raise WireFormatError(f"unsupported wire version {version} "
-                                  f"(expected {WIRE_VERSION})")
+            raise WireSkewError(f"unsupported wire version {version} "
+                                f"(expected {WIRE_VERSION})")
         body = _WIRE_PREFIX.size
+        if (len(blob) >= body + _CHECKSUM_TRAILER.size
+                and blob[-8:-4] == CHECKSUM_MAGIC):
+            _, want = _CHECKSUM_TRAILER.unpack_from(blob, len(blob) - 8)
+            if zlib.crc32(blob[:-8]) & 0xFFFFFFFF != want:
+                raise WireFormatError(
+                    "snapshot checksum mismatch: blob corrupted in transit")
+            blob = blob[:-8]
         try:
             header = json.loads(blob[body:body + hlen])
         except ValueError as e:
@@ -172,13 +206,13 @@ class WindowSnapshot:
             schema = AttributeSchema.from_spec(header["schema"],
                                                header["schema_spec"])
         if schema.fingerprint() != header["schema_fp"]:
-            raise WireFormatError(
+            raise WireSkewError(
                 f"schema {header['schema']!r} layout mismatch: local "
                 f"{schema.fingerprint()} != shipped {header['schema_fp']}")
         if tree is None:
             tree = RegionTree.from_spec(header["tree_spec"])
         if tree.fingerprint() != header["tree_fp"]:
-            raise WireFormatError(
+            raise WireSkewError(
                 f"region tree mismatch: local {tree.fingerprint()} != "
                 f"shipped {header['tree_fp']}")
         m, n = header["n_ranks"], header["n_regions"]

@@ -86,9 +86,11 @@ def detect_timeline(session_report) -> Tuple[StragglerVerdict, ...]:
     """Run straggler detection over every window of a streaming
     ``core.session.SessionReport`` — one verdict per window, oldest first.
     Windows that carry ``gap_ranks`` (merged pod views with missing hosts)
-    are classified gap-aware."""
+    are classified gap-aware.  Failed (tombstoned) windows carry no report
+    and are skipped."""
     return tuple(detect(w.report, gap_ranks=getattr(w, "gap_ranks", ()))
-                 for w in session_report.windows)
+                 for w in session_report.windows
+                 if not getattr(w, "failed", False))
 
 
 def persistent_stragglers(verdicts: Sequence[StragglerVerdict],

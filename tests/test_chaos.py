@@ -1,0 +1,254 @@
+"""Chaos harness: seeded fault injection over transport + analysis.
+
+The property layer is the ISSUE's acceptance contract: for ANY seeded
+fault schedule the supervised pipeline completes with exact accounting
+(analyzed + failed + dropped == submitted, submitted + no_contributors ==
+windows), and a fault-free schedule renders byte-identically to a plain
+unsupervised session over the same stream.  The unit layer pins each
+fault kind's classification (corrupt vs skew vs missing), the collector's
+retry/backoff and abandoned-producer guard, and the quarantine policy's
+corruption channel (a host alternating good and corrupt windows still
+fires).
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import AnalysisSession, CollectorQuarantinePolicy, PolicyEngine
+from repro.launch.collect import SnapshotCollector, TransportHealth, merge_blobs
+from repro.perfdbg.chaos import (ChaosError, ChaosInjector, ChaosSession,
+                                 DEFAULT_RATES, FAULT_KINDS, run_chaos,
+                                 shard_blobs, synthetic_stream, synthetic_tree)
+
+
+class TestInjector:
+    def test_deterministic_across_instances(self):
+        a = ChaosInjector(42, rates=DEFAULT_RATES)
+        b = ChaosInjector(42, rates=DEFAULT_RATES)
+        sched_a = [(k, w, h) for k in FAULT_KINDS for w in range(20)
+                   for h in range(3) if a.decide(k, w, h)]
+        sched_b = [(k, w, h) for k in FAULT_KINDS for w in range(20)
+                   for h in range(3) if b.decide(k, w, h)]
+        assert sched_a == sched_b
+        assert sched_a            # the default rates fire *something* in 420
+
+    def test_memoized_no_double_count(self):
+        inj = ChaosInjector(1, force={"drop": [(0, 0)]})
+        assert inj.decide("drop", 0, 0)
+        assert inj.decide("drop", 0, 0)
+        assert len(inj.faults) == 1
+
+    def test_force_overrides_zero_rate(self):
+        inj = ChaosInjector(0, rates={}, force={"analyzer": [(3, 0)]})
+        assert not inj.decide("analyzer", 2)
+        assert inj.decide("analyzer", 3)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault"):
+            ChaosInjector(0, rates={"gremlin": 0.5})
+        with pytest.raises(ValueError, match="unknown forced"):
+            ChaosInjector(0, force={"gremlin": [(0, 0)]})
+
+    def test_mangle_classification(self):
+        """Each transport fault lands in its designed health bucket."""
+        tree = synthetic_tree()
+        snap = synthetic_stream(tree, 1, 4)[0]
+        blobs = shard_blobs(snap, 4)
+        cases = {"truncate": "corrupt", "bitflip": "corrupt",
+                 "skew": "skew", "drop": "missing", "delay": "missing"}
+        for kind, expect in sorted(cases.items()):
+            inj = ChaosInjector(7, rates={}, force={kind: [(0, 2)]})
+            mangled = [inj.mangle_blob(b, 0, h) for h, b in enumerate(blobs)]
+            health = TransportHealth()
+            merged = merge_blobs(mangled, tree=tree, total_ranks=4,
+                                 strict=False, health=health)
+            assert health.last_statuses[2] == expect, kind
+            assert merged.gap_mask[2]
+
+
+class TestAccountingProperty:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 17, 99])
+    def test_any_schedule_survives_with_exact_accounting(self, seed):
+        res = run_chaos(seed, windows=16, hosts=3, ranks_per_host=2)
+        res.check()
+        # the harness really injected faults at these rates
+        assert res.faults or seed is None
+
+    @pytest.mark.parametrize("workers", [1, 3])
+    def test_fault_free_byte_identical_to_unsupervised(self, workers):
+        tree = synthetic_tree()
+        res = run_chaos(5, windows=10, hosts=2, ranks_per_host=2,
+                        rates={}, workers=workers)
+        res.check()
+        assert res.failed == 0 and res.dropped == 0
+        assert res.no_contributors == 0 and not res.faults
+        plain = AnalysisSession(tree)
+        for w, snap in enumerate(synthetic_stream(tree, 10, 4)):
+            plain.ingest_snapshot(snap, label=f"w{w}")
+        assert res.report_text == plain.report().render(tree)
+
+    def test_heavy_rates_still_account(self):
+        """Crank every rate 4x: most windows are damaged, some merge to
+        nothing — the pipeline still never wedges or miscounts."""
+        rates = {k: min(1.0, v * 4) for k, v in DEFAULT_RATES.items()}
+        res = run_chaos(11, windows=20, hosts=2, ranks_per_host=2,
+                        rates=rates, journal_path=None)
+        res.check()
+        assert len(res.faults) > 10
+
+    def test_journal_faults_counted_never_raised(self, tmp_path):
+        path = str(tmp_path / "chaos.journal")
+        res = run_chaos(2, windows=12, hosts=2, ranks_per_host=2,
+                        rates={"journal": 1.0}, journal_path=path)
+        res.check()
+        assert res.journal_errors == res.submitted
+        from repro.core import journal as jr
+        assert jr.scan(path) == []
+
+    def test_analyzer_faults_tombstone_and_restart(self):
+        res = run_chaos(3, windows=8, hosts=2, ranks_per_host=2,
+                        rates={}, force={"analyzer": [(2, 0), (5, 0)]})
+        res.check()
+        assert res.failed == 2
+        assert res.worker_restarts == 2
+        assert res.report.failed_count() == 2
+        assert "FAILED: ChaosError" in res.report_text
+
+    def test_policies_drive_quarantine_from_corruption(self):
+        res = run_chaos(4, windows=8, hosts=2, ranks_per_host=2,
+                        rates={}, force={"bitflip": [(w, 1) for w in range(8)]},
+                        policies="quarantine")
+        res.check()
+        assert res.health.bad(1) == 8
+        assert res.policy_entries > 0
+
+
+class TestChaosSession:
+    def test_raises_only_at_injected_windows(self):
+        tree = synthetic_tree()
+        inj = ChaosInjector(0, rates={}, force={"analyzer": [(1, 0)]})
+        sess = ChaosSession(tree, inj)
+        stream = synthetic_stream(tree, 3, 2)
+        sess.ingest_snapshot(stream[0])
+        with pytest.raises(ChaosError, match="window 1"):
+            sess.ingest_snapshot(stream[1])
+        sess.ingest_snapshot(stream[2])
+        assert len(sess.report().windows) == 2
+
+
+class TestCollectorHardening:
+    def _snap(self):
+        tree = synthetic_tree()
+        return synthetic_stream(tree, 1, 2)[0]
+
+    def test_retry_then_success(self):
+        health = TransportHealth()
+        col = SnapshotCollector(rank_offset=0, retries=2, backoff=0.0,
+                                health=health)
+        snap = self._snap()
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise RuntimeError("transient")
+            return snap
+
+        merged = col.gather_timed(flaky, total_ranks=2)
+        assert len(calls) == 3
+        assert health.retries == 2 and health.local_failures == 0
+        assert not merged.gap_mask.any()
+
+    def test_retries_exhausted_ships_none(self):
+        health = TransportHealth()
+        col = SnapshotCollector(rank_offset=0, retries=1, backoff=0.0,
+                                health=health)
+
+        def always_fails():
+            raise RuntimeError("broken recorder")
+
+        with pytest.raises(ValueError):
+            # the only host shipped nothing: no window to merge
+            col.gather_timed(always_fails, total_ranks=2)
+        assert health.local_failures == 1 and health.retries == 1
+
+    def test_timeout_abandons_and_pileup_guard_refuses_respawn(self):
+        health = TransportHealth()
+        col = SnapshotCollector(rank_offset=0, timeout=0.05, health=health)
+        release = threading.Event()
+        snap = self._snap()
+
+        def wedged():
+            release.wait(5.0)
+            return snap
+
+        with pytest.raises(ValueError):
+            col.gather_timed(wedged, total_ranks=2)
+        assert col._producer is not None and col._producer.is_alive()
+        # next window: the wedged producer is still alive — no new thread,
+        # ship None immediately, count the abandonment
+        t0 = time.monotonic()
+        with pytest.raises(ValueError):
+            col.gather_timed(wedged, total_ranks=2)
+        assert time.monotonic() - t0 < 0.05   # no second timeout wait
+        assert health.abandoned == 1
+        release.set()
+        col._producer.join(5.0)
+        # producer done: the guard clears and production works again
+        merged = col.gather_timed(lambda: snap, total_ranks=2)
+        assert not merged.gap_mask.any()
+
+    def test_legacy_fast_path_unchanged(self):
+        col = SnapshotCollector(rank_offset=0)
+        snap = self._snap()
+        merged = col.gather_timed(lambda: snap, total_ranks=2)
+        assert not merged.gap_mask.any()
+        assert col._producer is None
+
+
+class TestQuarantineCorruptionChannel:
+    def test_alternating_good_corrupt_host_still_fires(self):
+        """Satellite: gap streaks reset every other window for a host that
+        alternates good and corrupt, but the cumulative health counters
+        only grow — so the corruption channel proposes every window once
+        past threshold and the engine's debounce fires."""
+        tree = synthetic_tree()
+        health = TransportHealth()
+        pol = CollectorQuarantinePolicy(health=health, corrupt_windows=2)
+        engine = PolicyEngine([pol], k=2)
+        sess = AnalysisSession(tree)
+        stream = synthetic_stream(tree, 8, 4)
+        fired = []
+        for w, snap in enumerate(stream):
+            blobs = shard_blobs(snap, 2)
+            if w % 2 == 1:      # host 1 ships damaged bytes every 2nd window
+                blobs[1] = blobs[1][:40]
+            merged = merge_blobs(blobs, tree=tree, total_ranks=4,
+                                 strict=False, health=health)
+            entry = sess.ingest_snapshot(merged, label=f"w{w}")
+            fired.extend(engine.observe(entry, sess))
+        host_fires = [a for a in fired if a.target == "host:1"]
+        assert host_fires, "corruption channel never fired"
+        act = host_fires[0]
+        assert act.params["host"] == 1
+        assert act.params["corrupt"] >= 2 and act.params["skew"] == 0
+
+    def test_below_threshold_never_proposes(self):
+        health = TransportHealth()
+        health.observe(["ok", "corrupt"])
+        pol = CollectorQuarantinePolicy(health=health, corrupt_windows=3)
+        tree = synthetic_tree()
+        sess = AnalysisSession(tree)
+        entry = sess.ingest_snapshot(synthetic_stream(tree, 1, 2)[0])
+        assert [a for a in pol.observe(entry, sess)
+                if str(a.target).startswith("host:")] == []
+
+    def test_no_arg_construction_still_works(self):
+        # make_policies("quarantine") builds with no health: only the
+        # gap-streak channel is active, and observe never crashes
+        pol = CollectorQuarantinePolicy()
+        tree = synthetic_tree()
+        sess = AnalysisSession(tree)
+        entry = sess.ingest_snapshot(synthetic_stream(tree, 1, 2)[0])
+        assert pol.observe(entry, sess) == []

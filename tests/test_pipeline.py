@@ -368,3 +368,146 @@ class TestPool:
         with pytest.raises(ValueError, match="session="):
             AsyncAnalysisSession(tree, session=AnalysisSession(tree),
                                  column_workers=2)
+
+
+class PoisonSession(AnalysisSession):
+    """Raises on chosen window indices — the supervision tests' fault."""
+
+    def __init__(self, tree, poison=(), **kw):
+        super().__init__(tree, **kw)
+        self.poison = set(poison)
+
+    def _check(self, snap):
+        if int(snap.index) in self.poison:
+            raise RuntimeError(f"poison pill at window {snap.index}")
+
+    def ingest_snapshot(self, snap, label=None):
+        self._check(snap)
+        return super().ingest_snapshot(snap, label=label)
+
+    def prepare_snapshot(self, snap, label=None, memo=None):
+        self._check(snap)
+        return super().prepare_snapshot(snap, label=label, memo=memo)
+
+
+class TestSupervision:
+    """supervised=True: a failing window becomes a tombstoned timeline
+    entry, the worker restarts, accounting stays exact, and only K
+    consecutive failures escalate."""
+
+    def _stream(self, n):
+        tree = small_tree()
+        return tree, window_stream(tree, n, hot_at={1: {2: 6.0}})
+
+    def test_clean_input_byte_identical_to_unsupervised(self):
+        tree, snaps = self._stream(6)
+        plain = AsyncAnalysisSession(tree)
+        sup = AsyncAnalysisSession(tree, supervised=True)
+        for i, s in enumerate(snaps):
+            plain.submit(s, label=f"w{i}")
+            sup.submit(s, label=f"w{i}")
+        assert sup.close().render(tree) == plain.close().render(tree)
+        assert sup.failed == 0 and sup.worker_restarts == 0
+
+    @pytest.mark.parametrize("workers", [1, 3])
+    def test_failure_tombstoned_and_worker_restarted(self, workers):
+        tree, snaps = self._stream(5)
+        failures = []
+        pipe = AsyncAnalysisSession(
+            tree, session=PoisonSession(tree, poison={2}),
+            supervised=True, workers=workers,
+            on_failure=failures.append)
+        for i, s in enumerate(snaps):
+            pipe.submit(s, label=f"w{i}")
+        report = pipe.close()
+        assert pipe.analyzed == 4 and pipe.failed == 1
+        assert pipe.analyzed + pipe.failed + pipe.dropped == pipe.submitted
+        # single-worker: the dying thread is replaced; pooled workers catch
+        # prepare failures in-stage and never die
+        assert pipe.worker_restarts == (1 if workers == 1 else 0)
+        entries = report.windows
+        assert [e.failed for e in entries] == \
+            [False, False, True, False, False]
+        tomb = entries[2]
+        assert tomb.label == "w2" and tomb.report is None
+        assert "poison pill" in tomb.error
+        assert [e.label for e in failures] == ["w2"]
+        # the rendered timeline carries the tombstone and skips it in the
+        # bottleneck line
+        text = report.render(tree)
+        assert "[w2] FAILED: RuntimeError: poison pill" in text
+        assert report.failed_count() == 1
+
+    def test_diff_bridges_over_tombstone(self):
+        """The window after a failure diffs against the last GOOD report,
+        not the tombstone."""
+        tree = small_tree()
+        snaps = window_stream(tree, 4, hot_at={1: {2: 6.0}, 3: {2: 6.0}})
+        pipe = AsyncAnalysisSession(
+            tree, session=PoisonSession(tree, poison={2}), supervised=True)
+        for i, s in enumerate(snaps):
+            pipe.submit(s, label=f"w{i}")
+        report = pipe.close()
+        # w1 hot region 2 appeared; w2 tombstoned; w3 hot again — diffing
+        # against w1 (last good) makes region 2 "persisted", not "appeared"
+        assert 2 in report.windows[3].diff.persisted
+
+    def test_unsupervised_still_escalates_immediately(self):
+        tree, snaps = self._stream(3)
+        pipe = AsyncAnalysisSession(
+            tree, session=PoisonSession(tree, poison={1}))
+        for s in snaps:
+            pipe.submit(s)
+        with pytest.raises(RuntimeError, match="analysis worker failed"):
+            pipe.close()
+
+    def test_consecutive_failures_escalate_at_k(self):
+        tree, snaps = self._stream(6)
+        pipe = AsyncAnalysisSession(
+            tree, session=PoisonSession(tree, poison={1, 2, 3}),
+            supervised=True, escalate_after=3)
+        for i, s in enumerate(snaps):
+            try:
+                pipe.submit(s, label=f"w{i}")
+            except RuntimeError:
+                break
+        with pytest.raises(RuntimeError, match="analysis worker failed"):
+            pipe.close()
+
+    def test_nonconsecutive_failures_never_escalate(self):
+        tree, snaps = self._stream(6)
+        pipe = AsyncAnalysisSession(
+            tree, session=PoisonSession(tree, poison={1, 3, 5}),
+            supervised=True, escalate_after=2)
+        for i, s in enumerate(snaps):
+            pipe.submit(s, label=f"w{i}")
+        report = pipe.close()
+        assert pipe.failed == 3 and pipe.analyzed == 3
+        assert report.failed_count() == 3
+
+    def test_escalate_after_validation(self):
+        with pytest.raises(ValueError, match="escalate_after"):
+            AsyncAnalysisSession(small_tree(), supervised=True,
+                                 escalate_after=0)
+
+    def test_tombstone_label_falls_back_to_snapshot_label(self):
+        tree = small_tree()
+        snaps = window_stream(tree, 3)
+        pipe = AsyncAnalysisSession(
+            tree, session=PoisonSession(tree, poison={1}), supervised=True)
+        for s in snaps:
+            pipe.submit(s)               # no explicit label
+        report = pipe.close()
+        assert report.windows[1].label == "w1"   # the recorder's label
+
+    def test_policy_engine_skips_tombstones(self):
+        from repro.core import PolicyEngine, RebalancePolicy
+        tree, snaps = self._stream(6)
+        engine = PolicyEngine([RebalancePolicy()], k=2)
+        pipe = AsyncAnalysisSession(
+            tree, session=PoisonSession(tree, poison={2}),
+            supervised=True, policy_engine=engine)
+        for i, s in enumerate(snaps):
+            pipe.submit(s, label=f"w{i}")
+        pipe.close()
+        assert all(not d.window == 2 for d in engine.log.decisions)

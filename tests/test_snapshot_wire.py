@@ -281,3 +281,108 @@ class TestCollector:
         np.testing.assert_array_equal(merged.data["cpu_time"],
                                       snap.data["cpu_time"])
         assert merged.label == "w"
+
+
+class TestChecksumTrailer:
+    """The opt-in PDWC integrity trailer: default output byte-unchanged,
+    checksummed blobs roundtrip, bit damage is caught, and legacy blobs
+    (no trailer) keep parsing."""
+
+    def test_default_output_has_no_trailer(self):
+        snap = RegionRecorder(make_tree(2), 1).snapshot()
+        from repro.perfdbg.recorder import CHECKSUM_MAGIC
+        assert CHECKSUM_MAGIC not in snap.to_bytes()[-8:]
+
+    def test_checksummed_roundtrip(self):
+        tree = make_tree(3)
+        rec = RegionRecorder(tree, 2)
+        rec.add(0, 1, cpu_time=1.5, wall_time=2.0)
+        rec.add_program_wall(0, 2.0)
+        snap = rec.snapshot("w")
+        blob = snap.to_bytes(checksum=True)
+        assert len(blob) == len(snap.to_bytes()) + 8
+        assert_snapshots_equal(WindowSnapshot.from_bytes(blob, tree=tree),
+                               snap)
+
+    def test_bit_damage_caught_by_checksum(self):
+        snap = RegionRecorder(make_tree(2), 1).snapshot()
+        blob = bytearray(snap.to_bytes(checksum=True))
+        blob[len(blob) // 2] ^= 0x04
+        with pytest.raises(WireFormatError, match="checksum"):
+            WindowSnapshot.from_bytes(bytes(blob))
+
+    def test_legacy_blob_without_trailer_parses(self):
+        tree = make_tree(2)
+        snap = RegionRecorder(tree, 1).snapshot()
+        assert_snapshots_equal(
+            WindowSnapshot.from_bytes(snap.to_bytes(), tree=tree), snap)
+
+
+class TestVersionSkew:
+    """Satellite: version/schema skew — ``WireSkewError`` under strict
+    parsing, quarantined into the gap mask under ``strict=False``."""
+
+    def _skewed(self, snap):
+        import struct
+        blob = bytearray(snap.to_bytes())
+        struct.pack_into("<H", blob, 4, WIRE_VERSION + 7)
+        return bytes(blob)
+
+    def test_version_skew_raises_typed_subclass(self):
+        from repro.perfdbg import WireSkewError
+        snap = RegionRecorder(make_tree(2), 1).snapshot()
+        with pytest.raises(WireSkewError, match="version"):
+            WindowSnapshot.from_bytes(self._skewed(snap))
+        # the pre-existing contract: skew IS a WireFormatError
+        assert issubclass(WireSkewError, WireFormatError)
+
+    def test_version_check_precedes_checksum(self):
+        """A peer running a newer wire version classifies as skew even
+        when its trailer no longer matches the patched bytes."""
+        import struct
+        from repro.perfdbg import WireSkewError
+        snap = RegionRecorder(make_tree(2), 1).snapshot()
+        blob = bytearray(snap.to_bytes(checksum=True))
+        struct.pack_into("<H", blob, 4, WIRE_VERSION + 7)
+        with pytest.raises(WireSkewError, match="version"):
+            WindowSnapshot.from_bytes(bytes(blob))
+
+    def test_strict_merge_raises_lenient_quarantines(self):
+        from repro.launch.collect import TransportHealth, merge_blobs
+        from repro.perfdbg import WireSkewError
+        tree = make_tree(2)
+        snaps = [random_snapshot("paper", 2, 2, seed=s, rank_offset=2 * s)
+                 for s in range(2)]
+        blobs = [s.to_bytes(rank_offset=s.rank_offset) for s in snaps]
+        blobs[1] = self._skewed(snaps[1])
+        with pytest.raises(WireSkewError):
+            merge_blobs(blobs, total_ranks=4)
+        health = TransportHealth()
+        merged = merge_blobs(blobs, total_ranks=4, strict=False,
+                             health=health)
+        assert list(merged.gap_mask) == [False, False, True, True]
+        assert health.skew[1] == 1 and health.ok[0] == 1
+
+    def test_cross_shard_index_disagreement_is_skew(self):
+        """A shard that parses fine but reports a different window index
+        than its peers is an incompatible peer, not bit damage."""
+        from repro.launch.collect import TransportHealth, merge_blobs
+        a = random_snapshot("paper", 2, 2, seed=0, index=5, rank_offset=0)
+        b = random_snapshot("paper", 2, 2, seed=1, index=6, rank_offset=2)
+        health = TransportHealth()
+        merged = merge_blobs(
+            [a.to_bytes(rank_offset=0), b.to_bytes(rank_offset=2)],
+            total_ranks=4, strict=False, health=health)
+        assert health.last_statuses == {0: "ok", 1: "skew"}
+        assert merged.index == 5
+
+    def test_golden_corpus_blobs_unchanged(self):
+        """The checked-in corpus blobs predate the trailer: they must
+        parse exactly as before (and regeneration is byte-stable — the CI
+        make_corpus --check gate)."""
+        import pathlib
+        corpus = sorted(pathlib.Path("tests/data/corpus").glob("*.pdws"))
+        assert corpus, "corpus blobs missing"
+        for p in corpus:
+            snap = WindowSnapshot.from_bytes(p.read_bytes())
+            assert snap.n_ranks >= 1
