@@ -1,8 +1,8 @@
 """Analysis fast-path scaling sweep: us-per-call over m ranks.
 
 Sweeps the window-analysis hot path over pod sizes m in {8, 64, 256, 1024,
-4096} — plus a dedicated 16384-rank external tier — and writes a flat
-``{name: us_per_call}`` JSON (``BENCH_6.json`` at the repo root by default;
+4096} — plus a dedicated 16384-rank tier — and writes a flat
+``{name: us_per_call}`` JSON (``BENCH_10.json`` at the repo root by default;
 the ``_meta`` entry records the result schema and collapse mode) — the perf
 trajectory future PRs diff against.
 
@@ -21,11 +21,19 @@ Benchmarked stages (see docs/performance.md for the complexity table):
                             noisy band stays distinct)
 * ``session_window_m{m}``   AnalysisSession.ingest per window over a
                             4-window timeline whose middle windows repeat
-                            (incremental reuse engaged, as in production)
+                            (incremental reuse engaged, as in production) —
+                            root-cause clustering included, through the
+                            collapse-accelerated per-attribute path
+* ``session_fanout_m{m}_w{k}_{executor}{workers}``
+                            AsyncAnalysisSession per-window wall time over
+                            an 8-distinct-window stream fanned out across
+                            ``workers`` thread or process preparers (one
+                            long-lived pool; submit+drain timed)
 
-The 16384-rank tier (``external_jitter_m16384``/``external_noisy_m16384``)
-runs in every sweep including ``--quick``: under the certified collapse it
-is milliseconds, and CI gating it is the point of this benchmark.
+The 16384-rank tier (``external_jitter_m16384``/``external_noisy_m16384``/
+``session_window_m16384``) runs in every sweep including ``--quick``:
+under the certified collapse it is milliseconds, and CI gating it is the
+point of this benchmark.
 
 Usage:
 
@@ -49,7 +57,7 @@ import time
 import numpy as np
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
-DEFAULT_OUT = REPO_ROOT / "BENCH_6.json"
+DEFAULT_OUT = REPO_ROOT / "BENCH_10.json"
 M_SWEEP = (8, 64, 256, 1024, 4096)
 QUICK_SWEEP = (8, 64, 256, 1024)
 M_EXTERNAL_XL = 16384    # external-search-only tier, all sweeps
@@ -97,6 +105,69 @@ def _measurements(perf: np.ndarray, rng):
                         rng.uniform(1e6, 2e6, perf.shape))
 
 
+def _snapshot_stream(m: int, n_windows: int, rng):
+    """``n_windows`` *distinct* pod-shaped WindowSnapshots (no reuse hits:
+    the fan-out benchmark measures real throughput, not cache replay)."""
+    from repro.perfdbg.recorder import WindowSnapshot
+    from repro.perfdbg.schema import get_schema
+    schema = get_schema("paper")
+    tree = _tree()
+    out = []
+    for w in range(n_windows):
+        perf = _pod_matrix(m, rng, jitter=1e-3)
+        data = np.zeros((m, N_REGIONS), dtype=schema.dtype())
+        data["cpu_time"] = perf
+        data["wall_time"] = perf * 1.05
+        data["cycles"] = perf * 3e6
+        data["instructions"] = perf * 1.5e6
+        data["network_io"] = perf * 0.1
+        # pod-shaped like the rest of the stream: attribute clustering sees
+        # the same near-duplicate rank structure the collapse tier targets
+        data["instr_attr"] = data["instructions"]
+        out.append(WindowSnapshot(w, schema, tree, data,
+                                  (perf * 1.05).sum(axis=1), label=f"w{w}"))
+    return out
+
+
+def _session_timeline_us(tree, m: int, rng, reps: int) -> float:
+    """Per-window cost of the 4-window reuse timeline (the production
+    ingest pattern: one repeat, two distinct follow-ups)."""
+    from repro.core import AnalysisSession
+    tperf = _pod_matrix(m, rng)
+    windows = [_measurements(tperf, rng) for _ in range(2)] \
+        + [_measurements(_pod_matrix(m, rng, jitter=1e-3), rng)]
+    attrs = {"instructions": tperf, "network_io": tperf * 0.1}
+
+    def session_timeline():
+        session = AnalysisSession(tree)
+        session.ingest(windows[0], attrs)
+        session.ingest(windows[0], attrs)    # identical -> cache hit
+        session.ingest(windows[1], attrs)
+        session.ingest(windows[2], attrs)
+        return session
+    return _time(session_timeline, reps) / 4.0
+
+
+def _fanout_us(tree, m: int, rng, reps: int, *, executor: str,
+               workers: int, n_windows: int = 8) -> float:
+    """Per-window wall time of the async pool over distinct windows.  The
+    pool is built once (spawn-pool construction is a per-run cost, not a
+    per-window one) and each rep submits + drains the whole stream."""
+    from repro.core import AsyncAnalysisSession
+    snaps = _snapshot_stream(m, n_windows, rng)
+    pipe = AsyncAnalysisSession(tree, max_queue=n_windows, workers=workers,
+                                executor=executor, keep_windows=n_windows)
+
+    def burst():
+        for s in snaps:
+            pipe.submit(s)
+        pipe.drain()
+    try:
+        return _time(burst, reps) / n_windows
+    finally:
+        pipe.close()
+
+
 def _time(fn, reps: int) -> float:
     fn()   # warmup: allocator, BLAS thread pools, import side effects
     best = float("inf")
@@ -108,7 +179,7 @@ def _time(fn, reps: int) -> float:
 
 
 def run_sweep(ms, reps: int) -> dict:
-    from repro.core import AnalysisSession, analyze_external, cluster, kmeans_1d
+    from repro.core import analyze_external, cluster, kmeans_1d
     tree = _tree()
     out = {}
 
@@ -129,18 +200,7 @@ def run_sweep(ms, reps: int) -> dict:
         out[f"external_noisy_m{m}"] = _time(
             lambda: analyze_external(tree, nperf), reps)
 
-        windows = [_measurements(tperf, rng) for _ in range(2)] \
-            + [_measurements(_pod_matrix(m, rng, jitter=1e-3), rng)]
-        attrs = {"instructions": tperf, "network_io": tperf * 0.1}
-
-        def session_timeline():
-            session = AnalysisSession(tree)
-            session.ingest(windows[0], attrs)
-            session.ingest(windows[0], attrs)    # identical -> cache hit
-            session.ingest(windows[1], attrs)
-            session.ingest(windows[2], attrs)
-            return session
-        out[f"session_window_m{m}"] = _time(session_timeline, reps) / 4.0
+        out[f"session_window_m{m}"] = _session_timeline_us(tree, m, rng, reps)
 
         print(f"# m={m}: " + "  ".join(
             f"{k.rsplit('_', 1)[0]}={out[k]:.0f}us"
@@ -157,9 +217,22 @@ def run_sweep(ms, reps: int) -> dict:
     nperf = _noisy_pod_matrix(m, rng)
     out[f"external_noisy_m{m}"] = _time(
         lambda: analyze_external(tree, nperf), reps)
+    out[f"session_window_m{m}"] = _session_timeline_us(tree, m, rng, reps)
     print(f"# m={m}: external_jitter={out[f'external_jitter_m{m}']:.0f}us  "
-          f"external_noisy={out[f'external_noisy_m{m}']:.0f}us",
+          f"external_noisy={out[f'external_noisy_m{m}']:.0f}us  "
+          f"session_window={out[f'session_window_m{m}']:.0f}us",
           file=sys.stderr)
+
+    # multi-window fan-out: one long-lived pool, 8 distinct windows per
+    # burst, thread vs process preparers at the sweep's largest tier
+    mf = ms[-1]
+    rng = np.random.default_rng(mf + 1)
+    for executor, workers in (("thread", 1), ("thread", 4), ("process", 4)):
+        key = f"session_fanout_m{mf}_w8_{executor}{workers}"
+        out[key] = _fanout_us(tree, mf, rng, reps, executor=executor,
+                              workers=workers)
+        print(f"# fanout m={mf}: {executor} x{workers} = "
+              f"{out[key]:.0f}us/window", file=sys.stderr)
     return out
 
 

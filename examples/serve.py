@@ -48,6 +48,11 @@ def main() -> int:
                     help="analysis worker pool size (reports and policy "
                          "decisions are identical for any value; env "
                          "default PERFDBG_ANALYSIS_WORKERS)")
+    ap.add_argument("--analysis-executor", default="thread",
+                    choices=("thread", "process"),
+                    help="thread (shared session) or process (spawn-pool "
+                         "session replicas, past the GIL); reports are "
+                         "identical either way")
     ap.add_argument("--sync-analysis", action="store_true",
                     help="analyze each round inline instead of on the "
                          "async worker thread")
@@ -94,6 +99,7 @@ def main() -> int:
         # drains the (bounded) queue behind the serving loop
         session, pipe = None, AsyncAnalysisSession(tree, max_queue=4,
                                                    workers=args.analysis_workers,
+                                                   executor=args.analysis_executor,
                                                    on_window=on_window,
                                                    policy_engine=engine)
     io_kw = "host_io_bytes" if args.schema == "tpu" else "disk_io"

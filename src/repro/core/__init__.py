@@ -23,7 +23,7 @@ from .diagnosis import (BUILTIN_STRATEGIES, DIAGNOSIS_KINDS, Diagnosis,
                         work_imbalance_attrs)
 from .external import (CCRNode, COLLAPSE_AUTO, COLLAPSE_EXACT, COLLAPSE_MODES,
                        COLLAPSE_QUANTIZED, CollapseCertificate, ExternalReport,
-                       analyze_external)
+                       analyze_external, cluster_collapsed)
 from .internal import InternalReport, analyze_internal, attribute_flags, crnm
 from .kmeans import (KMeansResult, SEVERITY_NAMES, kmeans_1d,
                      kmeans_1d_reference, severity_classes)
@@ -64,7 +64,7 @@ __all__ = [
     "CACHE_STAGES", "CCRNode", "COLLAPSE_AUTO", "COLLAPSE_EXACT",
     "COLLAPSE_MODES", "COLLAPSE_QUANTIZED", "CollapseCertificate",
     "ExternalReport", "PreparedWindow",
-    "analyze_external", "InternalReport", "analyze_internal",
+    "analyze_external", "cluster_collapsed", "InternalReport", "analyze_internal",
     "attribute_flags", "crnm", "KMeansResult", "SEVERITY_NAMES", "kmeans_1d",
     "kmeans_1d_reference", "severity_classes", "ClusterResult", "cluster",
     "reachability_order",

@@ -153,3 +153,42 @@ def analyze_external_reference(tree, perf):
     tests compare the quantized fast path against (small m only)."""
     from .external import ExternalAnalyzer   # lazy: avoid an import cycle
     return ExternalAnalyzer(tree, perf, cluster_fn=cluster_reference).analyze()
+
+
+def extract_core_reference(table):
+    """The original §3.4.1 Steps 1-3 driven by the full discernibility
+    matrix (O(entries^2) Python pairs) — the oracle the weighted-group
+    clause sweep in ``roughset.extract_core`` is property-tested against."""
+    import itertools
+    from .roughset import (CoreResult, INDISCERNIBLE, SAME_DECISION, _absorb,
+                           discernibility_matrix)
+    mat = discernibility_matrix(table)
+    n = len(table.entry_ids)
+    clauses = []
+    inconsistent = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            c = mat[i][j]
+            if c == SAME_DECISION:
+                continue
+            if c == INDISCERNIBLE:
+                inconsistent += 1
+                continue
+            clauses.append(c)
+    if not clauses:
+        return CoreResult((), ((),) if not inconsistent else (), inconsistent)
+    cs = sorted({next(iter(c)) for c in clauses if len(c) == 1})
+    cs_set = set(cs)
+    remaining = _absorb([c for c in clauses if not (c & cs_set)])
+    if not remaining:
+        return CoreResult(tuple(cs), (tuple(cs),), inconsistent)
+    counts = {}
+    for combo in itertools.product(*[sorted(c) for c in remaining]):
+        key = frozenset(combo)
+        counts[key] = counts.get(key, 0) + 1
+    min_size = min(len(k) for k in counts)
+    at_min = {k: v for k, v in counts.items() if len(k) == min_size}
+    max_count = max(at_min.values())
+    winners = sorted((tuple(sorted(cs_set | k)) for k, v in at_min.items()
+                      if v == max_count))
+    return CoreResult(tuple(cs), tuple(winners), inconsistent)

@@ -29,13 +29,13 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .external import ExternalReport
+from .external import (COLLAPSE_AUTO, CollapseCertificate, ExternalReport,
+                       cluster_collapsed)
 from .internal import InternalReport, attribute_flags
-from .optics import cluster
 from .regions import RegionTree
 from .roughset import (CoreResult, DecisionTable, external_decision_table,
                        extract_core, internal_decision_table)
-from .vectors import as_matrix, keep_columns
+from .vectors import as_matrix
 
 PAPER_ATTRIBUTES = ("l1_miss_rate", "l2_miss_rate", "disk_io", "network_io",
                     "instructions")
@@ -92,6 +92,21 @@ class RootCauseReport:
     #: names, which are whatever the collection schema happened to call its
     #: fields.  Empty when the ingesting caller declared no roles.
     roles: Tuple[Tuple[str, str], ...] = ()
+    #: per-attribute exactness certificates of the collapse-accelerated
+    #: clustering behind the decision table ((attr name, certificate)
+    #: pairs, external tables only — the internal table is built from
+    #: k-means flags, not OPTICS runs).  Every certificate's labels are
+    #: exact: ``mode == "quantized"`` means the eps-margin check *proved*
+    #: them equal to the uncollapsed clustering's, ``"exact"`` means the
+    #: duplicate collapse (or plain path) produced them directly.
+    certificates: Tuple[Tuple[str, Optional[CollapseCertificate]], ...] = ()
+
+    def certificate_of(self, attr: str) -> Optional[CollapseCertificate]:
+        """Collapse certificate of one attribute's clustering run."""
+        for name, c in self.certificates:
+            if name == attr:
+                return c
+        return None
 
     def role_of(self, attr: str) -> Optional[str]:
         """Declared role of one attribute (None when undeclared)."""
@@ -138,15 +153,24 @@ class AnalysisReport:
 
 def external_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
                          ext: ExternalReport,
-                         roles: Optional[Mapping[str, str]] = None
+                         roles: Optional[Mapping[str, str]] = None,
+                         collapse: str = COLLAPSE_AUTO
                          ) -> Optional[RootCauseReport]:
     """Rough-set root causes for external bottlenecks (paper §3.4.2).
 
-    Per-attribute OPTICS clustering is restricted to the CCCR columns; the
-    per-process attribution is computed with vectorized masks so repeated
-    window analysis stays cheap.  ``roles`` (attribute name -> semantic
-    role, normally the collection schema's declaration) rides along on the
-    report so downstream consumers never hardcode attribute names.
+    Per-attribute OPTICS clustering is restricted to the CCCR columns
+    *before* any matrix is materialized: each attribute is sliced to the
+    m x |cccr cols| submatrix and clustered one at a time (peak memory is
+    one attribute's slice, never the n_attrs x m x n stack), through the
+    same collapse-accelerated path as the CCR search
+    (:func:`~repro.core.external.cluster_collapsed`): duplicate ranks
+    collapse to weighted points, and under ``collapse="quantized"``/
+    ``"auto"`` at pod scale the certified ball collapse engages with
+    automatic exact fallback — the per-attribute certificates land on
+    ``RootCauseReport.certificates``.  ``roles`` (attribute name ->
+    semantic role, normally the collection schema's declaration) rides
+    along on the report so downstream consumers never hardcode attribute
+    names.
     """
     if not ext.exists or not ext.cccrs:
         return None
@@ -155,11 +179,12 @@ def external_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
     cols = np.flatnonzero(np.isin(region_ids, np.asarray(ext.cccrs)))
     m = len(ext.clustering.labels)
     ids = np.zeros((m, len(names)), dtype=np.int64)
-    if names:   # attrs may be empty: locate-only analysis
-        kept = np.stack([keep_columns(as_matrix(attrs[n]), cols)
-                         for n in names])                     # (na, m, n)
-        for a in range(len(names)):   # OPTICS runs per attribute matrix
-            ids[:, a] = cluster(kept[a]).labels
+    certs: list = []
+    for a, n in enumerate(names):   # attrs may be empty: locate-only analysis
+        sub = as_matrix(attrs[n])[:, cols]   # one attribute slice at a time
+        res, cert = cluster_collapsed(sub, collapse=collapse)
+        ids[:, a] = res.labels
+        certs.append((n, cert))
     table = external_decision_table(names, ids, ext.clustering.labels)
     core = extract_core(table)
     # attribute each non-majority process to its flagged core attributes
@@ -167,7 +192,8 @@ def external_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],
     flagged = (ids != 0) & core_mask[None, :]
     per_entry = tuple((i, tuple(itertools.compress(names, flagged[i])))
                       for i in range(m))
-    return RootCauseReport(table, core, per_entry, _role_pairs(names, roles))
+    return RootCauseReport(table, core, per_entry, _role_pairs(names, roles),
+                           certificates=tuple(certs))
 
 
 def internal_root_causes(tree: RegionTree, attrs: Mapping[str, np.ndarray],

@@ -88,6 +88,110 @@ class CollapseCertificate:
     exact_calls: int          # re-clusterings that took an exact path
 
 
+def _group_identical_rows(X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Group bit-identical rows of ``X``: returns ``(gid, reps)`` where
+    ``gid[i]`` is row i's dense group id and ``reps[g]`` the row index of
+    group g's representative (its smallest member).  Group ids are ordered
+    by representative index — the visit order a sequential expansion over
+    the original rows would see."""
+    m = X.shape[0]
+    sort = np.lexsort(X.T[::-1])
+    Xs = X[sort]
+    boundary = np.empty(m, dtype=bool)
+    boundary[0] = True
+    np.any(Xs[1:] != Xs[:-1], axis=1, out=boundary[1:])
+    gid_sorted = np.cumsum(boundary) - 1
+    gid = np.empty(m, dtype=np.int64)
+    gid[sort] = gid_sorted
+    r = int(gid_sorted[-1]) + 1
+    first = np.full(r, m, dtype=np.int64)
+    np.minimum.at(first, gid, np.arange(m))
+    relabel = np.empty(r, dtype=np.int64)
+    relabel[np.argsort(first, kind="stable")] = np.arange(r)
+    return relabel[gid], np.sort(first)
+
+
+def cluster_collapsed(X, *, collapse: str = COLLAPSE_AUTO
+                      ) -> Tuple[ClusterResult, Optional[CollapseCertificate]]:
+    """One-shot collapse-accelerated clustering of an arbitrary matrix —
+    the per-attribute root-cause path (``analyzer.external_root_causes``),
+    under the same contract as the CCR search's rank collapse:
+
+    * bit-identical duplicate rows always collapse to one weighted point
+      (identical rows have identical neighbourhoods, so the weighted
+      closure's labels equal the uncollapsed ones);
+    * under ``"quantized"`` (or ``"auto"`` at >= AUTO_COLLAPSE_MIN_RANKS
+      rows) the distinct rows additionally ball-group, and the single
+      clustering call must pass the eps-margin exactness certificate
+      (:func:`~repro.core.optics.robust_reachability_graph`) — accepted
+      means the labels *provably* equal the exact ones, rejected falls
+      back to the exact duplicate level automatically.
+
+    Returns ``(result, certificate)``; the certificate is ``None`` only
+    for empty input.  ``severity_bound`` is always 0.0 here: labels are
+    exact under both outcomes and no severity is derived from this path.
+    """
+    if collapse not in COLLAPSE_MODES:
+        raise ValueError(f"collapse must be one of {COLLAPSE_MODES}, "
+                         f"got {collapse!r}")
+    X = as_matrix(X)
+    m = X.shape[0]
+    if m == 0:
+        return cluster(X), None
+    gid, reps = _group_identical_rows(X)
+    Xe = X[reps]
+    r = Xe.shape[0]
+    w = np.bincount(gid).astype(np.float64)
+    ln_e = np.sqrt(np.sum(Xe * Xe, axis=1))
+    quantized = (collapse == COLLAPSE_QUANTIZED
+                 or (collapse == COLLAPSE_AUTO
+                     and m >= AUTO_COLLAPSE_MIN_RANKS))
+
+    def cert(mode, groups, delta_max, collapsed, exact):
+        return CollapseCertificate(
+            mode=mode, ranks=m, distinct_rows=r, groups=groups,
+            delta_max=delta_max, severity_bound=0.0,
+            collapsed_calls=collapsed, exact_calls=exact)
+
+    if quantized and r > 1:
+        pos = ln_e[ln_e > 0.0]
+        if pos.size:
+            radius = QUANT_RADIUS_FRACTION * max(
+                EPS_FRACTION * float(np.min(pos)), _ABS_EPS_FLOOR)
+            grouped = ball_group_rows(
+                Xe, radius, max_groups=min(max(64, r // 8), 4096))
+            if grouped is not None:
+                qgid, leaders, delta = grouped
+                r_q = len(leaders)
+                if r_q < r and 8 * r_q * r_q <= FAST_PATH_MAX_BYTES:
+                    L = Xe[leaders]
+                    d2 = np.empty((r_q, r_q))
+                    for start, stop, blk in iter_sqdistance_blocks(L):
+                        d2[start:stop] = blk
+                    eps_q = cluster_eps(np.sqrt(np.sum(L * L, axis=1)))
+                    margin = (1.1 * delta[:, None] + delta[None, :]) \
+                        * (1.0 + _CERT_SLACK)
+                    reach = robust_reachability_graph(d2, eps_q, margin)
+                    if reach is not None:
+                        glabels = cluster_labels(
+                            reach, weights=np.bincount(qgid, weights=w))
+                        return (labels_to_result(glabels[qgid[gid]]),
+                                cert(COLLAPSE_QUANTIZED, r_q,
+                                     float(np.max(delta)), 1, 0))
+    exact_calls = 1
+    if 8 * r * r > FAST_PATH_MAX_BYTES:
+        # too many distinct rows for the weighted graph: plain path (still
+        # exact — blocked reachability over the full matrix)
+        return cluster(X), cert(COLLAPSE_EXACT, m, 0.0, 0, exact_calls)
+    eps = cluster_eps(ln_e)
+    reach = reachability_graph(iter_sqdistance_blocks(Xe), eps, exact=True)
+    glabels = cluster_labels(reach, weights=w)
+    # mode reflects the level that actually produced the labels: a rejected
+    # or ineffective ball grouping lands here and reports "exact"
+    return (labels_to_result(glabels[gid]),
+            cert(COLLAPSE_EXACT, r, 0.0, 0, exact_calls))
+
+
 @dataclasses.dataclass(frozen=True)
 class CCRNode:
     rid: int
@@ -323,23 +427,8 @@ class ExternalAnalyzer:
             self._fast = False
             return False
         # group bit-identical rows; representative = smallest member rank
-        sort = np.lexsort(X.T[::-1])
-        Xs = X[sort]
-        boundary = np.empty(m, dtype=bool)
-        boundary[0] = True
-        np.any(Xs[1:] != Xs[:-1], axis=1, out=boundary[1:])
-        gid_sorted = np.cumsum(boundary) - 1
-        gid = np.empty(m, dtype=np.int64)
-        gid[sort] = gid_sorted
-        r = int(gid_sorted[-1]) + 1
-        first = np.full(r, m, dtype=np.int64)
-        np.minimum.at(first, gid, np.arange(m))
-        # relabel groups in representative-rank order so group index order
-        # is anchor rank order (what the sequential expansion visits)
-        relabel = np.empty(r, dtype=np.int64)
-        relabel[np.argsort(first, kind="stable")] = np.arange(r)
-        self._gid_e = relabel[gid]
-        reps = np.sort(first)               # rank of each group's first member
+        self._gid_e, reps = _group_identical_rows(X)
+        r = len(reps)
         self._w_e = np.bincount(self._gid_e).astype(np.float64)
         self._X_e = X[reps]                 # (r_e, n) distinct rows
         self._ln_e = np.sqrt(np.sum(self._X_e * self._X_e, axis=1))

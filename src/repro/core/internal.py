@@ -51,7 +51,14 @@ class InternalReport:
     region_ids: Tuple[int, ...]
 
     def severity_of(self, rid: int) -> int:
-        i = self.region_ids.index(rid)
+        try:
+            i = self.region_ids.index(rid)
+        except ValueError:
+            # unknown region: same LookupError family as the gated-window
+            # case below, never a bare list.index ValueError
+            raise LookupError(
+                f"region {rid} is not in this report's region tree "
+                f"(known ids: {list(self.region_ids)})") from None
         if i >= len(self.severity.labels):
             # gated windows (AnalysisSession internal_gate_s) carry an empty
             # severity stub — no region was classified

@@ -59,13 +59,27 @@ completes the next-due window drives assembly until it runs dry).
 Incremental reuse stays on: concurrent preparers fingerprint against the
 latest *assembled* window's memo — possibly stale, never wrong, since reuse
 only substitutes results for fingerprint-equal inputs.  With ``workers == 1``
-the worker ingests directly via ``ingest_snapshot`` (the pre-pool path, same
-hooks, same cache-hit pattern).
+(thread executor) the worker ingests directly via ``ingest_snapshot`` (the
+pre-pool path, same hooks, same cache-hit pattern).
+
+``executor="process"`` shards the prepare stage across *worker processes*
+instead of threads — past the GIL, for analysis-bound timelines where the
+numpy stages leave too little released-GIL time to overlap.  Each claimed
+window is serialized to its PDWS wire blob and shipped to a spawn-pool
+replica of the analysis session (see ``_process_worker_init``); the prepared
+result pickles back and flows through the *same* single in-order assembler,
+so ``SessionReport.render()`` stays byte-identical and the ``PolicyLog``
+identical across executor kinds and worker counts.  Supervision semantics
+are intact: analysis faults (including chaos-injected ones, which fire in
+the parent via the session's ``check_analyzer_fault`` hook) tombstone the
+same windows they would under threads.
 """
 from __future__ import annotations
 
 import collections
+import multiprocessing
 import threading
+from concurrent.futures import ProcessPoolExecutor
 from typing import Callable, Dict, List, Optional
 
 from .regions import RegionTree
@@ -75,8 +89,63 @@ BLOCK = "block"
 DROP_OLDEST = "drop_oldest"
 BACKPRESSURE_POLICIES = (BLOCK, DROP_OLDEST)
 
+THREAD = "thread"
+PROCESS = "process"
+EXECUTOR_KINDS = (THREAD, PROCESS)
+
 #: assembler sentinel for a submission sequence evicted by ``drop_oldest``
 _DROPPED = object()
+
+
+# -- process-pool prepare stage ----------------------------------------------
+# The child side of ``executor="process"``: each worker process holds a
+# *replica* AnalysisSession built from the parent session's configuration
+# (tree spec + scalar knobs) and runs the thread-safe analysis stage on
+# windows shipped as PDWS wire blobs — the format is fully self-describing
+# (schema + tree specs ride in the header), so the replica needs no shared
+# state with the parent.  Each replica keeps its own memo chain for
+# incremental reuse: child-locally "latest prepared", possibly stale
+# relative to the pod timeline, never wrong (reuse only substitutes results
+# for fingerprint-equal inputs).  The prepared result (frozen report +
+# memo + features, plain dataclasses over numpy) pickles back to the
+# parent's in-order assembler.
+
+_CHILD_SESSION: Optional[AnalysisSession] = None
+_CHILD_MEMO = None
+
+
+class _SaltStrategy:
+    """Carries only the parent strategy's reuse-fingerprint salt into the
+    child replicas; diagnosis itself runs in the parent's assembler
+    (``ingest_prepared``), never in a child."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def diagnose(self, entry):   # pragma: no cover - never called in a child
+        return None
+
+
+def _process_worker_init(tree_spec, cfg: dict) -> None:
+    global _CHILD_SESSION, _CHILD_MEMO
+    tree = RegionTree.from_spec(tree_spec)
+    _CHILD_SESSION = AnalysisSession(
+        tree, reuse=cfg["reuse"], internal_gate_s=cfg["internal_gate_s"],
+        collapse=cfg["collapse"], column_workers=cfg["column_workers"],
+        strategy=_SaltStrategy(cfg["strategy_salt"]))
+    _CHILD_MEMO = None
+
+
+def _process_prepare(blob: bytes, label):
+    global _CHILD_MEMO
+    from repro.perfdbg.recorder import WindowSnapshot   # lazy: core never
+    # imports perfdbg at module level (layering invariant)
+    snap = WindowSnapshot.from_bytes(blob)
+    prepared = _CHILD_SESSION.prepare_snapshot(snap, label=label,
+                                               memo=_CHILD_MEMO)
+    if _CHILD_SESSION.reuse:
+        _CHILD_MEMO = prepared.memo
+    return prepared
 
 
 class PipelineClosed(RuntimeError):
@@ -105,8 +174,15 @@ class AsyncAnalysisSession:
     ``workers`` sizes the pool sharding *independent windows*; submission
     order is preserved end to end (see the module docstring).  With a
     custom ``session`` subclass note the hook difference: the pool drives
-    ``prepare_snapshot``/``ingest_prepared``, while ``workers == 1`` drives
-    ``ingest_snapshot``.
+    ``prepare_snapshot``/``ingest_prepared``, while ``workers == 1`` under
+    the thread executor drives ``ingest_snapshot``.
+
+    ``executor`` picks where the prepare stage runs: ``"thread"`` (default)
+    shares the parent session across pool threads; ``"process"`` ships each
+    window's wire blob to a spawn-pool session replica (configuration read
+    off the wrapped session — works with a custom ``session=`` too) and is
+    pooled even at ``workers == 1``.  Reports and policy decisions are
+    identical either way.
     """
 
     def __init__(self, tree: RegionTree, *, keep_windows: Optional[int] = None,
@@ -115,7 +191,8 @@ class AsyncAnalysisSession:
                  session: Optional[AnalysisSession] = None,
                  policy_engine=None, reuse: bool = True,
                  internal_gate_s: Optional[float] = None,
-                 workers: int = 1, collapse: Optional[str] = None,
+                 workers: int = 1, executor: str = THREAD,
+                 collapse: Optional[str] = None,
                  column_workers: Optional[int] = None, strategy=None,
                  supervised: bool = False, escalate_after: int = 3,
                  journal=None,
@@ -123,6 +200,9 @@ class AsyncAnalysisSession:
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(f"backpressure must be one of "
                              f"{BACKPRESSURE_POLICIES}, got {backpressure!r}")
+        if executor not in EXECUTOR_KINDS:
+            raise ValueError(f"executor must be one of {EXECUTOR_KINDS}, "
+                             f"got {executor!r}")
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
         if workers < 1:
@@ -158,6 +238,25 @@ class AsyncAnalysisSession:
         self._on_window = on_window
         self._engine = policy_engine
         self._workers_n = workers
+        self._executor = executor
+        # the pooled (prepare/assemble) path runs whenever preparation is
+        # sharded — across threads (workers > 1) or across processes (any
+        # worker count: even one process worker needs the blob round-trip)
+        self._pooled = workers > 1 or executor == PROCESS
+        self._proc_pool: Optional[ProcessPoolExecutor] = None
+        if executor == PROCESS:
+            s = self._session
+            cfg = {"reuse": s.reuse, "internal_gate_s": s.internal_gate_s,
+                   "collapse": s.collapse,
+                   "column_workers": s.column_workers,
+                   "strategy_salt": getattr(s.strategy, "name", "")}
+            # spawn, not fork: worker replicas must not inherit the parent's
+            # thread/lock state, and the core layer stays jax-free either way
+            self._proc_pool = ProcessPoolExecutor(
+                max_workers=workers,
+                mp_context=multiprocessing.get_context("spawn"),
+                initializer=_process_worker_init,
+                initargs=(s.tree.to_spec(), cfg))
         self._supervised = supervised
         self._escalate_after = escalate_after
         self._on_failure = on_failure
@@ -180,7 +279,7 @@ class AsyncAnalysisSession:
         self._assembling = False  # one assembler at a time
         self._inflight = 0        # claimed but result not yet posted
         self._latest_memo = None  # memo of the last assembled window
-        run = self._run_single if workers == 1 else self._run_pooled
+        run = self._run_single if not self._pooled else self._run_pooled
         self._threads = [
             threading.Thread(target=run, name=f"perfdbg-analysis-{i}",
                              daemon=True)
@@ -286,8 +385,20 @@ class AsyncAnalysisSession:
                 continue
             seq, snap, label = claimed
             try:
-                outcome: object = self._session.prepare_snapshot(
-                    snap, label=label, memo=memo)
+                if self._proc_pool is not None:
+                    # fault-injection hooks (chaos sessions) must fire in the
+                    # parent, deterministically per window, so tombstones land
+                    # in the same timeline slots for every executor kind
+                    check = getattr(self._session, "check_analyzer_fault",
+                                    None)
+                    if check is not None:
+                        check(snap)
+                    outcome: object = self._proc_pool.submit(
+                        _process_prepare, snap.to_bytes(),
+                        label or getattr(snap, "label", None)).result()
+                else:
+                    outcome = self._session.prepare_snapshot(
+                        snap, label=label, memo=memo)
             except BaseException as e:
                 outcome = _PrepareFailure(
                     e, label=label or getattr(snap, "label", None))
@@ -397,7 +508,7 @@ class AsyncAnalysisSession:
                     seq, _, _ = self._q.popleft()
                     self._dropped += 1
                     self._done += 1
-                    if self._workers_n > 1:
+                    if self._pooled:
                         # the assembler must skip this sequence
                         self._results[seq] = _DROPPED
             self._q.append((self._submitted, snap, label))
@@ -432,6 +543,8 @@ class AsyncAnalysisSession:
         report = self.drain(timeout)
         for t in self._threads:
             t.join(timeout)
+        if self._proc_pool is not None:
+            self._proc_pool.shutdown(wait=True)
         if self._journal is not None:
             self._journal.close()
         return report

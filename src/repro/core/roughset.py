@@ -130,21 +130,108 @@ class CoreResult:
         return f"core set: {alts or '{}'}"
 
 
-def extract_core(table: DecisionTable) -> CoreResult:
-    """Steps 1-3 of paper §3.4.1."""
-    mat = discernibility_matrix(table)
-    n = len(table.entry_ids)
-    clauses: List[FrozenSet[str]] = []
+#: sentinel for a row group whose members carry more than one decision (any
+#: entry from another group discerns against *some* member of it)
+_MANY = object()
+
+#: distinct-row-group count above which the clause sweep switches from the
+#: per-pair Python loop to the vectorized bitmask path (when it applies)
+_VECTOR_MIN_GROUPS = 64
+
+
+def _discernibility_clauses(table: DecisionTable
+                            ) -> Tuple[set, int]:
+    """Distinct discernibility clauses + exact INDISCERNIBLE pair count.
+
+    The full matrix (Eq. 5) is O(entries^2) Python pairs, but
+    :func:`extract_core` only consumes (a) the *set* of distinct clauses
+    (Steps 1-3 dedup and absorb; multiplicity never matters) and (b) the
+    exact count of indiscernible pairs.  Both survive collapsing identical
+    attribute rows into weighted groups:
+
+    * a pair of entries from the *same* row group is indiscernible iff
+      their decisions differ — count = sum over groups of the cross-decision
+      member-pair products, computed from the per-decision counts;
+    * a pair from *different* row groups always differs in some attribute,
+      and its clause depends only on the two rows — so one clause per group
+      pair, skipped entirely when both groups carry the same single
+      decision.
+
+    SPMD decision tables collapse hard (cluster-id rows repeat across
+    ranks), so the sweep runs over G distinct rows instead of m entries.
+    When G stays large (fully noisy data) and every attribute row is
+    hashable-int-codable, the pairwise sweep is vectorized: rows become
+    int codes, each clause a <=63-bit difference mask computed by a numpy
+    comparison against all later rows at once.
+    """
+    names = table.attr_names
+    na = len(names)
+    row_index: Dict[Tuple[object, ...], int] = {}
+    dec_counts: List[Dict[object, int]] = []
+    for row, dec in zip(table.rows, table.decisions):
+        g = row_index.setdefault(row, len(dec_counts))
+        if g == len(dec_counts):
+            dec_counts.append({})
+        dc = dec_counts[g]
+        dc[dec] = dc.get(dec, 0) + 1
+    rows_g = list(row_index)            # insertion order == group id
+    G = len(rows_g)
+
     inconsistent = 0
-    for i in range(n):
-        for j in range(i + 1, n):
-            c = mat[i][j]
-            if c == SAME_DECISION:
+    for dc in dec_counts:
+        if len(dc) > 1:
+            total = sum(dc.values())
+            inconsistent += (total * total - sum(c * c for c in dc.values())) // 2
+
+    # a group's decision "signature": its single decision, or _MANY
+    single = [next(iter(dc)) if len(dc) == 1 else _MANY for dc in dec_counts]
+
+    clauses: set = set()
+    if G > _VECTOR_MIN_GROUPS and 0 < na <= 63:
+        # vectorized sweep: per-attribute value codes, clause = bitmask of
+        # differing columns; one (G-g) x na comparison per leading group
+        codes = np.empty((G, na), dtype=np.int64)
+        for a in range(na):
+            vocab: Dict[object, int] = {}
+            codes[:, a] = [vocab.setdefault(rows_g[g][a], len(vocab))
+                           for g in range(G)]
+        dvocab: Dict[object, int] = {}
+        dsig = np.asarray([-1 if s is _MANY else dvocab.setdefault(s, len(dvocab))
+                           for s in single], dtype=np.int64)
+        pow2 = np.left_shift(np.int64(1), np.arange(na, dtype=np.int64))
+        masks: set = set()
+        for g in range(G - 1):
+            rest = np.arange(g + 1, G)
+            if dsig[g] >= 0:
+                rest = rest[dsig[rest] != dsig[g]]
+            if not rest.size:
                 continue
-            if c == INDISCERNIBLE:
-                inconsistent += 1
-                continue
-            clauses.append(c)  # type: ignore[arg-type]
+            diff = codes[rest] != codes[g]
+            masks.update(np.unique(diff @ pow2).tolist())
+        for mask in masks:
+            clauses.add(frozenset(
+                names[a] for a in range(na) if mask >> a & 1))
+    else:
+        for g in range(G - 1):
+            rg, sg = rows_g[g], single[g]
+            for h in range(g + 1, G):
+                if sg is not _MANY and sg == single[h]:
+                    continue
+                clauses.add(frozenset(
+                    a for a, vi, vj in zip(names, rg, rows_g[h]) if vi != vj))
+    return clauses, inconsistent
+
+
+def extract_core(table: DecisionTable) -> CoreResult:
+    """Steps 1-3 of paper §3.4.1.
+
+    The clause sweep runs over weighted groups of identical attribute rows
+    (:func:`_discernibility_clauses`) instead of the full O(entries^2)
+    matrix; the result is identical to running the steps over
+    :func:`discernibility_matrix` — the property tests pin the equivalence
+    against ``core._reference.extract_core_reference``.
+    """
+    clauses, inconsistent = _discernibility_clauses(table)
     if not clauses:
         return CoreResult((), ((),) if not inconsistent else (), inconsistent)
 

@@ -97,13 +97,18 @@ class _WindowMemo:
 
 
 def _fingerprint_attrs(attrs: Mapping[str, np.ndarray],
-                       roles: Optional[Mapping[str, str]]) -> bytes:
+                       roles: Optional[Mapping[str, str]],
+                       collapse: str) -> bytes:
     names = sorted(attrs)
     salt = "\x00".join(names)
     if roles:
         # roles land on the cached RootCauseReports, so a role change must
         # miss the memo even when the matrices are bit-identical
         salt += "\x01" + "\x00".join(f"{k}={roles[k]}" for k in sorted(roles))
+    # the collapse mode rides on the root-cause reports too (per-attribute
+    # certificates), so a memo taken under one mode never replays under
+    # another
+    salt += f"\x02collapse={collapse}"
     return fingerprint_arrays(*(attrs[k] for k in names), salt=salt)
 
 
@@ -161,7 +166,7 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
         fp_internal = fingerprint_arrays(
             measurements.wall_time, measurements.program_wall,
             measurements.cycles, measurements.instructions)
-        fp_attrs = _fingerprint_attrs(attrs, roles)
+        fp_attrs = _fingerprint_attrs(attrs, roles, collapse)
     else:
         fp_cpu = fp_internal = fp_attrs = b""
     hits: List[str] = []
@@ -173,7 +178,8 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
             ext_rc = memo.report.external_root_causes
             hits.append("external_root_causes")
         else:
-            ext_rc = external_root_causes(tree, attrs, ext, roles=roles)
+            ext_rc = external_root_causes(tree, attrs, ext, roles=roles,
+                                          collapse=collapse)
     else:
         ext = analyze_external(tree, measurements.cpu_time,
                                collapse=collapse,
@@ -182,7 +188,8 @@ def _analyze_window_cached(tree: RegionTree, measurements: Measurements,
             ext = analyze_external(tree, measurements.cpu_time,
                                    collapse=COLLAPSE_EXACT,
                                    column_workers=column_workers)
-        ext_rc = external_root_causes(tree, attrs, ext, roles=roles)
+        ext_rc = external_root_causes(tree, attrs, ext, roles=roles,
+                                      collapse=collapse)
 
     gated = (internal_gate_s is not None and not ext.exists
              and ext.severity < internal_gate_s)

@@ -89,6 +89,13 @@ def main(argv=None) -> int:
                          "in submission order, so reports and policy "
                          "decisions are identical for any value; env "
                          "default PERFDBG_ANALYSIS_WORKERS)")
+    ap.add_argument("--analysis-executor", default="thread",
+                    choices=("thread", "process"),
+                    help="where analysis workers run: 'thread' shares the "
+                         "session across pool threads, 'process' ships each "
+                         "window's wire blob to a spawn-pool session replica "
+                         "(past the GIL; reports and policy decisions stay "
+                         "identical)")
     ap.add_argument("--analysis-backpressure", default="block",
                     choices=("block", "drop-oldest"),
                     help="queue-full policy: stall the step loop vs evict "
@@ -560,7 +567,8 @@ def main(argv=None) -> int:
         pipeline = AsyncAnalysisSession(
             tree, max_queue=args.analysis_queue,
             backpressure=args.analysis_backpressure.replace("-", "_"),
-            workers=args.analysis_workers, session=base_session,
+            workers=args.analysis_workers,
+            executor=args.analysis_executor, session=base_session,
             supervised=supervised, escalate_after=args.escalate_after,
             journal=journal, on_failure=on_failure,
             on_window=on_window, policy_engine=engine)

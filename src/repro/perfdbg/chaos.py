@@ -188,17 +188,22 @@ class ChaosSession(AnalysisSession):
         super().__init__(tree, **kw)
         self.injector = injector
 
-    def _maybe_fault(self, snap) -> None:
+    def check_analyzer_fault(self, snap) -> None:
+        """Raise :class:`ChaosError` iff the injector schedules an analyzer
+        fault at this window.  Public because the pipeline's process
+        executor calls it in the *parent* before shipping the blob — the
+        fault decision is pure in the window index, so tombstones land in
+        identical timeline slots for every executor kind."""
         if self.injector.decide("analyzer", int(snap.index)):
             raise ChaosError(
                 f"injected analyzer fault at window {snap.index}")
 
     def ingest_snapshot(self, snap, label=None):
-        self._maybe_fault(snap)
+        self.check_analyzer_fault(snap)
         return super().ingest_snapshot(snap, label=label)
 
     def prepare_snapshot(self, snap, label=None, memo=None):
-        self._maybe_fault(snap)
+        self.check_analyzer_fault(snap)
         return super().prepare_snapshot(snap, label=label, memo=memo)
 
 
@@ -291,7 +296,8 @@ def run_chaos(seed: int = 0, windows: int = 12, hosts: int = 2,
               ranks_per_host: int = 2, *,
               rates: Optional[Mapping[str, float]] = None,
               force: Optional[Mapping[str, Sequence[Tuple[int, int]]]] = None,
-              workers: int = 1, escalate_after: int = 10**9,
+              workers: int = 1, executor: str = "thread",
+              escalate_after: int = 10**9,
               journal_path: Optional[str] = None,
               policies: Optional[str] = None,
               verbose: bool = False) -> ChaosResult:
@@ -326,7 +332,7 @@ def run_chaos(seed: int = 0, windows: int = 12, hosts: int = 2,
     pipe = AsyncAnalysisSession(
         tree, session=session, supervised=True,
         escalate_after=escalate_after, journal=journal,
-        policy_engine=engine, workers=workers)
+        policy_engine=engine, workers=workers, executor=executor)
     no_contributors = 0
     for w, snap in enumerate(stream):
         blobs = shard_blobs(snap, hosts)
@@ -361,6 +367,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--hosts", type=int, default=2)
     ap.add_argument("--ranks-per-host", type=int, default=2)
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--executor", default="thread",
+                    choices=("thread", "process"),
+                    help="analysis executor kind (tombstones land in the "
+                         "same windows either way)")
     ap.add_argument("--rate-scale", type=float, default=1.0,
                     help="multiply every DEFAULT_RATES entry")
     ap.add_argument("--journal", default=None, metavar="FILE")
@@ -372,6 +382,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
              for k, v in DEFAULT_RATES.items()}
     res = run_chaos(args.seed, args.windows, args.hosts, args.ranks_per_host,
                     rates=rates, workers=args.workers,
+                    executor=args.executor,
                     journal_path=args.journal, policies=args.policies,
                     verbose=True)
     for f in res.faults:

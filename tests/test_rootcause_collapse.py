@@ -1,0 +1,188 @@
+"""Collapse-accelerated root-cause clustering: ``cluster_collapsed`` must
+label exactly like ``cluster`` in every mode (certificate acceptance proves
+it, fallback guarantees it), ``external_root_causes`` must produce the same
+tables/cores/attributions under every collapse mode while staying
+memory-bound to one attribute slice, and ``InternalReport.severity_of``
+must raise a typed LookupError for unknown regions."""
+import tracemalloc
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade property tests to fixed-seed example sweeps
+    from _hypo import given, settings, st
+
+from repro.core import (COLLAPSE_AUTO, COLLAPSE_EXACT, COLLAPSE_MODES,
+                        COLLAPSE_QUANTIZED, RegionTree, analyze_external,
+                        cluster, cluster_collapsed)
+from repro.core.analyzer import external_root_causes
+from repro.core.external import AUTO_COLLAPSE_MIN_RANKS
+from repro.core.internal import InternalReport
+from repro.core.kmeans import severity_classes
+
+
+def chain_tree(n):
+    tree = RegionTree()
+    for i in range(1, n + 1):
+        tree.add(f"r{i}", rid=i)
+    return tree
+
+
+def pod_matrix(rng, m, n, groups=3, jitter=1e-5, hot=None):
+    base = rng.uniform(5.0, 50.0, (groups, n))
+    X = np.abs(base[rng.integers(0, groups, m)]
+               + jitter * rng.standard_normal((m, n)))
+    if hot is not None:
+        col, factor = hot
+        X[: max(2, m // 8), col] *= factor
+    return X
+
+
+# ---------------------------------------------------------------------------
+# cluster_collapsed == cluster, every mode
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 96), st.integers(1, 5), st.integers(1, 4),
+       st.sampled_from([0.0, 1e-8, 1e-4]), st.integers(0, 99999),
+       st.sampled_from(COLLAPSE_MODES))
+def test_cluster_collapsed_matches_cluster(m, n, groups, jitter, seed, mode):
+    rng = np.random.default_rng(seed)
+    X = pod_matrix(rng, m, n, groups, jitter,
+                   hot=(int(rng.integers(0, n)), 4.0)
+                   if rng.random() < 0.5 else None)
+    res, cert = cluster_collapsed(X, collapse=mode)
+    ref = cluster(X)
+    assert res.labels == ref.labels
+    assert res.clusters == ref.clusters
+    assert res.isolated == ref.isolated
+    assert cert is not None and cert.ranks in (m, cert.distinct_rows)
+    assert cert.mode in (COLLAPSE_EXACT, COLLAPSE_QUANTIZED)
+
+
+def test_cluster_collapsed_duplicates_and_zero_rows():
+    X = np.vstack([np.tile([3.0, 4.0], (6, 1)),
+                   np.zeros((3, 2)),
+                   np.tile([30.0, 40.0], (4, 1))])
+    for mode in COLLAPSE_MODES:
+        res, cert = cluster_collapsed(X, collapse=mode)
+        ref = cluster(X)
+        assert res.labels == ref.labels
+        assert cert.distinct_rows == 3
+
+    empty, cert = cluster_collapsed(np.zeros((0, 3)))
+    assert empty.labels == () and cert is None
+
+
+def test_cluster_collapsed_auto_engages_at_pod_scale():
+    rng = np.random.default_rng(1)
+    X = pod_matrix(rng, AUTO_COLLAPSE_MIN_RANKS, 3, groups=2, jitter=1e-6,
+                   hot=(0, 3.0))
+    res, cert = cluster_collapsed(X, collapse=COLLAPSE_AUTO)
+    assert cert.mode == COLLAPSE_QUANTIZED
+    assert cert.groups < cert.distinct_rows
+    assert res.labels == cluster(X).labels
+
+    small, cert_s = cluster_collapsed(X[:32], collapse=COLLAPSE_AUTO)
+    assert cert_s.mode == COLLAPSE_EXACT
+
+
+def test_cluster_collapsed_mode_validation():
+    with pytest.raises(ValueError, match="collapse"):
+        cluster_collapsed(np.ones((3, 2)), collapse="approximate")
+
+
+# ---------------------------------------------------------------------------
+# external_root_causes through the fast machinery
+# ---------------------------------------------------------------------------
+
+def hot_window(rng, m, n, n_attrs):
+    cpu = pod_matrix(rng, m, n, groups=1, jitter=1e-6, hot=(1, 5.0))
+    attrs = {}
+    for a in range(n_attrs):
+        A = pod_matrix(rng, m, n, groups=1, jitter=1e-6)
+        if a % 2 == 0:     # half the attributes correlate with the hot ranks
+            A[: max(2, m // 8), 1] *= 4.0
+        attrs[f"attr{a}"] = A
+    return cpu, attrs
+
+
+@pytest.mark.parametrize("m", [24, AUTO_COLLAPSE_MIN_RANKS])
+def test_root_causes_identical_across_collapse_modes(m):
+    rng = np.random.default_rng(7)
+    n = 4
+    tree = chain_tree(n)
+    cpu, attrs = hot_window(rng, m, n, n_attrs=3)
+    ext = analyze_external(tree, cpu)
+    assert ext.exists and ext.cccrs
+    reports = {mode: external_root_causes(tree, attrs, ext, collapse=mode)
+               for mode in COLLAPSE_MODES}
+    base = reports[COLLAPSE_EXACT]
+    assert base is not None
+    for mode, rep in reports.items():
+        assert rep.table == base.table
+        assert rep.core == base.core
+        assert rep.per_entry == base.per_entry
+        assert rep.render() == base.render()
+        # one certificate per attribute, labels provably exact either way
+        assert [name for name, _ in rep.certificates] == list(attrs)
+        for name in attrs:
+            cert = rep.certificate_of(name)
+            assert cert is not None
+            assert cert.mode in (COLLAPSE_EXACT, COLLAPSE_QUANTIZED)
+    # at pod scale the auto mode must actually collapse: every attribute of
+    # this near-duplicate pod certifies through the quantized path
+    if m >= AUTO_COLLAPSE_MIN_RANKS:
+        rep = reports[COLLAPSE_AUTO]
+        assert any(rep.certificate_of(a).mode == COLLAPSE_QUANTIZED
+                   for a in attrs)
+    assert base.certificate_of("no_such_attr") is None
+
+
+def test_root_causes_memory_bound_on_wide_schema():
+    """Clustering slices one attribute at a time: peak allocation must stay
+    far below the old n_attrs x m x n stack."""
+    rng = np.random.default_rng(0)
+    m, n, n_attrs = 1024, 24, 32
+    tree = chain_tree(n)
+    cpu, attrs = hot_window(rng, m, n, n_attrs)
+    ext = analyze_external(tree, cpu)
+    assert ext.exists
+    stack_bytes = n_attrs * m * n * 8
+    tracemalloc.start()
+    rep = external_root_causes(tree, attrs, ext)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert rep is not None
+    assert peak < stack_bytes / 2, \
+        f"peak {peak} bytes vs old stack {stack_bytes}"
+
+
+# ---------------------------------------------------------------------------
+# InternalReport.severity_of: typed lookup errors
+# ---------------------------------------------------------------------------
+
+def make_internal_report():
+    region_ids = (1, 2, 3)
+    km = severity_classes(np.array([0.1, 0.5, 2.0]))
+    return InternalReport((0.1, 0.5, 2.0), km, (), (), region_ids)
+
+
+def test_severity_of_unknown_region_is_lookup_error():
+    rep = make_internal_report()
+    with pytest.raises(LookupError, match=r"region 99 is not in this "
+                                          r"report's region tree"):
+        rep.severity_of(99)
+    # the message names the known ids, and the error is not a bare
+    # list.index ValueError leaking the implementation
+    try:
+        rep.severity_of(99)
+    except LookupError as e:
+        assert "[1, 2, 3]" in str(e)
+        assert e.__cause__ is None and e.__suppress_context__
+
+
+def test_severity_of_known_region_still_answers():
+    rep = make_internal_report()
+    assert rep.severity_of(3) == max(rep.severity.labels)
